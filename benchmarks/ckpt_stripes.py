@@ -1,0 +1,47 @@
+"""Framework integration: EC-checkpoint encode + failure-repair cost for a
+training state of each (reduced) architecture, CP-Azure vs Azure."""
+from __future__ import annotations
+
+import shutil
+import tempfile
+
+import jax
+
+from repro.configs import ARCHS, get_model
+from repro.ftx.checkpoint import CheckpointConfig, CheckpointManager
+from repro.ftx.stripestore import StoreConfig
+from repro.train.optimizer import adamw_init
+
+from ._util import csv
+
+
+def run(fast: bool = False) -> dict:
+    archs = ARCHS[:2] if fast else ARCHS[:6]
+    out = {}
+    for arch in archs:
+        api = get_model(arch, smoke=True)
+        params = api.init_params(jax.random.key(0))
+        state = {"params": params, "opt": adamw_init(params)}
+        for scheme in ("azure", "cp-azure"):
+            tmp = tempfile.mkdtemp(prefix="bench_ck_")
+            try:
+                cm = CheckpointManager(tmp, CheckpointConfig(
+                    store=StoreConfig(scheme=scheme, k=8, r=2, p=2,
+                                      block_size=1 << 17)))
+                info = cm.save(1, state)
+                # lose the host holding the last parity + one data host
+                store = cm.store_for(1)
+                gr_node = store.stripes[0].node_of_block[store.scheme.n - 1]
+                cm.fail_hosts(1, [gr_node])
+                tele = cm.repair(1)
+                out[f"{arch}/{scheme}"] = {
+                    "state_mb": info["bytes"] / 1e6,
+                    "encode_s": info["encode_seconds"],
+                    "repair_blocks": tele["blocks_read"],
+                    "repair_sim_s": tele["sim_seconds"]}
+                csv(f"ckpt/{arch}/{scheme}", info["encode_seconds"] * 1e6,
+                    f"state={info['bytes'] / 1e6:.1f}MB "
+                    f"parity_repair_blocks={tele['blocks_read']}")
+            finally:
+                shutil.rmtree(tmp, ignore_errors=True)
+    return out

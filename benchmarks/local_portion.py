@@ -1,0 +1,33 @@
+"""Tables IV + V: portion of (effective) local repair under 2-node failures."""
+from __future__ import annotations
+
+import time
+
+from repro.core import metrics as M
+from repro.core.schemes import PAPER_PARAMS, make_scheme
+
+from ._util import PAPER, SCHEME_ORDER, csv
+
+
+def run(fast: bool = False) -> dict:
+    labels = list(PAPER_PARAMS)
+    if fast:
+        labels = ["P1", "P5"]
+    out = {}
+    for metric, fn in (("LOCAL", M.local_portion),
+                       ("EFFECTIVE", M.effective_local_portion)):
+        print(f"-- {metric} --")
+        for name in SCHEME_ORDER:
+            row = {}
+            for lbl in labels:
+                k, r, p = PAPER_PARAMS[lbl]
+                s = make_scheme(name, k, r, p)
+                t0 = time.perf_counter()
+                v = fn(s)
+                us = (time.perf_counter() - t0) * 1e6
+                ref = PAPER[metric][name][list(PAPER_PARAMS).index(lbl)]
+                row[lbl] = {"ours": round(v, 3), "paper": ref}
+                csv(f"{metric}/{name}/{lbl}", us,
+                    f"ours={v:.2f} paper={ref}")
+            out[f"{metric}/{name}"] = row
+    return out

@@ -1,0 +1,44 @@
+"""Table VI: MTTDL. Calibrated once on Azure P1 = 2.66e17 years; both the
+paper's Figure-2 chain semantics and the rank-faithful strict model are
+reported (see DESIGN.md / EXPERIMENTS.md for the discussion)."""
+from __future__ import annotations
+
+import time
+
+from repro.core.reliability import ReliabilityParams, calibrate_scale, stripe_mttdl_years
+from repro.core.schemes import PAPER_PARAMS, make_scheme
+
+from ._util import PAPER, SCHEME_ORDER, csv
+
+_CAL = {}
+
+
+def _params() -> ReliabilityParams:
+    if "p" not in _CAL:
+        az = make_scheme("azure", 6, 2, 2)
+        base = ReliabilityParams(detect_hours_single=0.0,
+                                 detect_hours_multi=0.0)
+        _CAL["p"] = calibrate_scale(az, 2.66e17, params=base, samples=800)
+    return _CAL["p"]
+
+
+def run(fast: bool = False) -> dict:
+    labels = ["P1", "P5"] if fast else ["P1", "P2", "P3", "P5", "P6"]
+    params = _params()
+    out = {"repair_time_scale": params.repair_time_scale}
+    for model in ("paper", "strict"):
+        print(f"-- model={model} --")
+        for name in SCHEME_ORDER:
+            row = {}
+            for lbl in labels:
+                k, r, p = PAPER_PARAMS[lbl]
+                s = make_scheme(name, k, r, p)
+                t0 = time.perf_counter()
+                v = stripe_mttdl_years(s, params, samples=600, model=model)
+                us = (time.perf_counter() - t0) * 1e6
+                ref = PAPER["MTTDL"][name][list(PAPER_PARAMS).index(lbl)]
+                row[lbl] = {"ours": v, "paper": ref}
+                csv(f"MTTDL[{model}]/{name}/{lbl}", us,
+                    f"ours={v:.2e} paper={ref:.2e} ratio={v / ref:.2f}")
+            out[f"{model}/{name}"] = row
+    return out

@@ -1,0 +1,34 @@
+"""Tables I + III: ADRC / ARC1 / ARC2 for P1-P8 x 6 schemes, with paper
+reference values and per-cell deltas."""
+from __future__ import annotations
+
+import time
+
+from repro.core import metrics as M
+from repro.core.schemes import PAPER_PARAMS, make_scheme
+
+from ._util import PAPER, SCHEME_ORDER, csv
+
+
+def run(fast: bool = False) -> dict:
+    labels = list(PAPER_PARAMS)
+    if fast:
+        labels = ["P1", "P4", "P5"]
+    out = {}
+    for metric, fn in (("ADRC", M.adrc), ("ARC1", M.arc1), ("ARC2", M.arc2)):
+        print(f"-- {metric} --")
+        for name in SCHEME_ORDER:
+            row = {}
+            for li, lbl in enumerate(labels):
+                k, r, p = PAPER_PARAMS[lbl]
+                s = make_scheme(name, k, r, p)
+                t0 = time.perf_counter()
+                v = fn(s)
+                us = (time.perf_counter() - t0) * 1e6
+                ref = PAPER[metric][name][list(PAPER_PARAMS).index(lbl)]
+                row[lbl] = {"ours": round(v, 3), "paper": ref,
+                            "delta": round(v - ref, 3)}
+                csv(f"{metric}/{name}/{lbl}", us,
+                    f"ours={v:.2f} paper={ref} delta={v - ref:+.2f}")
+            out[f"{metric}/{name}"] = row
+    return out

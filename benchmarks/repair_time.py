@@ -1,0 +1,71 @@
+"""Experiments 1 + 3 (Figs 6, 9): single- and two-node repair time on the
+simulated cluster (bandwidth-model time + real JAX encode/decode compute),
+P1-P8, all six schemes."""
+from __future__ import annotations
+
+import shutil
+import tempfile
+
+import numpy as np
+
+from repro.core.schemes import PAPER_PARAMS
+from repro.ftx.stripestore import StoreConfig, StripeStore
+
+from ._util import SCHEME_ORDER, csv
+
+
+def _mk_store(scheme, k, r, p, block_kb, tmp, stripes=2):
+    cfg = StoreConfig(scheme=scheme, k=k, r=r, p=p,
+                      block_size=block_kb * 1024, bandwidth_gbps=1.0)
+    store = StripeStore(tmp, cfg)
+    rng = np.random.default_rng(0)
+    for s in range(stripes):
+        for i in range(k):
+            store.put(f"s{s}o{i}", rng.integers(0, 256, cfg.block_size - 8,
+                                                dtype=np.uint8).tobytes())
+        store.seal()
+    store.save_manifest()
+    return store
+
+
+def run(fast: bool = False) -> dict:
+    labels = ["P1", "P5"] if fast else list(PAPER_PARAMS)
+    block_kb = 64 if fast else 256
+    out = {}
+    rng = np.random.default_rng(7)
+    for lbl in labels:
+        k, r, p = PAPER_PARAMS[lbl]
+        for name in SCHEME_ORDER:
+            tmp = tempfile.mkdtemp(prefix="bench_rt_")
+            try:
+                store = _mk_store(name, k, r, p, block_kb, tmp)
+                n = store.scheme.n
+                # single-node: average over every block position of stripe 0
+                singles = []
+                positions = range(n) if n <= 16 else \
+                    sorted(rng.choice(n, 12, replace=False).tolist())
+                for b in positions:
+                    node = store.stripes[0].node_of_block[b]
+                    store.fail_node(node)
+                    tele = store.repair_all()
+                    store.revive_node(node)
+                    singles.append(tele["sim_seconds"])
+                # two-node: 8 random pairs
+                doubles = []
+                for _ in range(8):
+                    bs = rng.choice(n, 2, replace=False)
+                    nodes = [store.stripes[0].node_of_block[b] for b in bs]
+                    for nd in nodes:
+                        store.fail_node(nd)
+                    tele = store.repair_all()
+                    for nd in nodes:
+                        store.revive_node(nd)
+                    doubles.append(tele["sim_seconds"])
+                s1 = float(np.mean(singles))
+                s2 = float(np.mean(doubles))
+                out[f"{lbl}/{name}"] = {"single_s": s1, "double_s": s2}
+                csv(f"repair_time/{name}/{lbl}", s1 * 1e6,
+                    f"single={s1:.3f}s double={s2:.3f}s")
+            finally:
+                shutil.rmtree(tmp, ignore_errors=True)
+    return out

@@ -1,0 +1,20 @@
+"""Deliverable (g): roofline table from the dry-run artifacts.
+
+Delegates to repro.launch.roofline (importable without the 512-device flag —
+it only reads the cached dry-run JSONs)."""
+from __future__ import annotations
+
+from repro.launch.roofline import build_table, render
+
+from ._util import csv
+
+
+def run(fast: bool = False) -> dict:
+    table = build_table()
+    print(render(table))
+    for row in table:
+        if row.get("skip"):
+            continue
+        csv(f"roofline/{row['arch']}/{row['shape']}", 0.0,
+            f"dom={row['dominant']} frac={row['mfu_like']:.3f}")
+    return {"rows": table}

@@ -1,0 +1,57 @@
+"""Benchmark driver — one section per paper table/figure.
+
+``python -m benchmarks.run [--fast] [--only SECTION]``
+
+Sections (paper analogue in brackets):
+  repair_costs      ADRC / ARC1 / ARC2, P1-P8 x 6 schemes   [Tables I, III]
+  local_portion     (effective) local-repair portions       [Tables IV, V]
+  mttdl             Markov MTTDL, paper + strict models     [Table VI]
+  repair_time       simulated cluster single/two-node repair [Figs 6, 9]
+  blocksize_sweep   repair time/throughput vs block size    [Figs 7, 8]
+  filelevel         file-level degraded-read optimization   [Fig 10]
+  kernels           encode kernels vs jnp reference          [§V substrate]
+  ckpt_stripes      EC-checkpoint encode/repair per arch    [framework]
+  roofline          dry-run roofline table                   [deliverable g]
+
+Each section prints ``name,us_per_call,derived`` CSV rows and writes JSON to
+benchmarks/results/.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+SECTIONS = ("repair_costs", "local_portion", "mttdl", "repair_time",
+            "blocksize_sweep", "filelevel", "kernels", "ckpt_stripes",
+            "roofline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=SECTIONS)
+    ap.add_argument("--fast", action="store_true",
+                    help="narrow parameter subsets (CI mode)")
+    args = ap.parse_args()
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    todo = [args.only] if args.only else list(SECTIONS)
+    failures = []
+    for name in todo:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        print(f"\n===== {name} =====", flush=True)
+        try:
+            out = mod.run(fast=args.fast)
+            (RESULTS / f"{name}.json").write_text(json.dumps(out, indent=1))
+        except Exception as e:  # keep the suite going; report at the end
+            import traceback
+
+            failures.append(name)
+            print(f"SECTION FAILED: {name}: {e}")
+            traceback.print_exc()
+    print(f"\nsections failed: {failures or 'none'}")
+
+
+if __name__ == "__main__":
+    main()

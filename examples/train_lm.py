@@ -1,0 +1,17 @@
+"""End-to-end driver: train a reduced qwen2.5 for a few hundred steps with
+CP-LRC erasure-coded checkpoints and a mid-run host failure + restore.
+
+PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+import sys
+
+sys.argv = [sys.argv[0], "--arch", "qwen2.5-3b", "--steps",
+            sys.argv[sys.argv.index("--steps") + 1]
+            if "--steps" in sys.argv else "120",
+            "--batch", "8", "--seq", "128", "--ckpt-every", "40",
+            "--kill-host", "2", "--lr", "3e-3"]
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    main()

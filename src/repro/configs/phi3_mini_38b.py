@@ -1,0 +1,15 @@
+"""phi3-mini-3.8b [dense]: 32L d_model=3072 32H (GQA kv=32) d_ff=8192
+vocab=32064 — RoPE SwiGLU [arXiv:2404.14219]."""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3-mini-3.8b", family="dense",
+    num_layers=32, d_model=3072, num_heads=32, num_kv_heads=32,
+    d_ff=8192, vocab_size=32064, act="swiglu",
+)
+
+SMOKE = ModelConfig(
+    name="phi3-smoke", family="dense",
+    num_layers=2, d_model=128, num_heads=4, num_kv_heads=4,
+    d_ff=256, vocab_size=512, act="swiglu",
+)

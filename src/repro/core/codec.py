@@ -1,0 +1,126 @@
+"""Stripe codec: the JAX/Pallas data path for encode, repair and decode.
+
+Planning (which blocks to read, with which GF coefficients) happens on the
+host in numpy — mirroring the paper's coordinator — and the byte crunching
+runs through the Pallas kernels in ``repro.kernels``.
+
+The reconstruction rule is fully general: to rebuild block ``b`` from a
+read-set ``R`` we solve ``gen[R].T @ x = gen[b]`` over GF(2^8) and combine
+``x @ stack(R-blocks)`` on device. This covers local-group repair, cascaded
+repair and global decode with one code path, and works for every scheme.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Iterable, Mapping, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.kernels.ops import encode_op, gf_matmul_op
+
+from .gf import gf_solve_any
+from .repair import MultiRepairPlan, RepairPlan, multi_repair_plan, single_repair_plan
+from .schemes import LRCScheme
+
+
+@dataclasses.dataclass
+class StripeCodec:
+    scheme: LRCScheme
+    backend: str = "gf"  # see repro.kernels.ops.BACKENDS
+
+    # ------------------------------------------------------------- encoding
+    def encode(self, data: jax.Array | np.ndarray) -> jax.Array:
+        """(k, B) data blocks -> (n, B) full stripe (systematic layout)."""
+        import jax.numpy as jnp
+
+        data = jnp.asarray(data, jnp.uint8)
+        if data.shape[0] != self.scheme.k:
+            raise ValueError(f"expected {self.scheme.k} data blocks, got {data.shape}")
+        parity = encode_op(self.scheme.parity_matrix(), data, backend=self.backend)
+        return jnp.concatenate([data, parity], axis=0)
+
+    # ----------------------------------------------------- reconstruction
+    def reconstruction_coeffs(self, target: int, reads: Sequence[int],
+                              free: Mapping[int, np.ndarray] | None = None
+                              ) -> Optional[np.ndarray]:
+        """GF coefficients x with block[target] = sum_i x_i * block[reads[i]]."""
+        gen = self.scheme.gen
+        a = gen[list(reads)].T.astype(np.uint8)  # (k, |R|)
+        return gf_solve_any(a, gen[target])
+
+    def combine(self, coeffs: np.ndarray, blocks: Sequence[jax.Array]) -> jax.Array:
+        """x (|R|,) . blocks (|R|, B) -> (B,) on device via the GF kernel."""
+        import jax.numpy as jnp
+
+        stacked = jnp.stack([jnp.asarray(b, jnp.uint8) for b in blocks], axis=0)
+        backend = "ref" if self.backend not in ("gf", "ref") else self.backend
+        out = gf_matmul_op(coeffs.reshape(1, -1), stacked, backend=backend)
+        return out[0]
+
+    def repair_single(self, failed: int, available: Mapping[int, jax.Array],
+                      policy: str = "paper") -> tuple[jax.Array, RepairPlan]:
+        plan = single_repair_plan(self.scheme, failed, policy)
+        reads = sorted(plan.reads)
+        coeffs = self.reconstruction_coeffs(failed, reads)
+        if coeffs is None:
+            raise RuntimeError(f"inconsistent repair plan for block {failed}")
+        block = self.combine(coeffs, [available[b] for b in reads])
+        return block, plan
+
+    def repair_multi(self, failed: Iterable[int],
+                     available: Mapping[int, jax.Array]
+                     ) -> tuple[dict[int, jax.Array], MultiRepairPlan]:
+        """Execute the min-read multi-node plan; returns rebuilt blocks.
+
+        ``available`` must contain every surviving block the plan reads.
+        Repaired blocks become sources for later steps (the cascading
+        effect), matching the planner's free-reuse accounting.
+        """
+        plan = multi_repair_plan(self.scheme, failed)
+        if not plan.feasible:
+            raise RuntimeError(f"pattern {sorted(failed)} is not decodable")
+        have: dict[int, jax.Array] = dict(available)
+        rebuilt: dict[int, jax.Array] = {}
+        pending = [b for b, _ in plan.steps]
+        for b in pending:
+            # Sources: anything readable or already repaired. Use the plan's
+            # read set plus repaired blocks; solve for b against that basis.
+            basis = sorted(set(plan.reads) | set(rebuilt))
+            coeffs = self.reconstruction_coeffs(b, basis)
+            if coeffs is None:
+                raise RuntimeError(f"cannot reconstruct block {b} from {basis}")
+            nz = [i for i, c in enumerate(coeffs) if c]
+            use = [basis[i] for i in nz]
+            block = self.combine(coeffs[nz], [have[s] for s in use])
+            have[b] = block
+            rebuilt[b] = block
+        return rebuilt, plan
+
+    def decode_all(self, available: Mapping[int, jax.Array]) -> jax.Array:
+        """Rebuild the k data blocks from any rank-k subset of blocks."""
+        import jax.numpy as jnp
+
+        ids = sorted(available)
+        gen = self.scheme.gen
+        a = gen[ids].T.astype(np.uint8)  # (k, |ids|)
+        rows = []
+        for tgt in range(self.scheme.k):
+            x = gf_solve_any(a, gen[tgt])
+            if x is None:
+                raise RuntimeError("available blocks do not span the data")
+            rows.append(x)
+        coeffs = np.stack(rows, axis=0)  # (k, |ids|)
+        stacked = jnp.stack([jnp.asarray(available[b], jnp.uint8) for b in ids])
+        return gf_matmul_op(coeffs, stacked, backend=self.backend
+                            if self.backend in ("gf", "ref") else "ref")
+
+
+@functools.lru_cache(maxsize=64)
+def cached_codec(scheme_key: tuple, backend: str = "gf") -> StripeCodec:
+    """Codec cache keyed by (name, k, r, p)."""
+    from .schemes import make_scheme
+
+    name, k, r, p = scheme_key
+    return StripeCodec(make_scheme(name, k, r, p), backend=backend)

@@ -1,0 +1,2 @@
+"""Data pipeline substrate."""
+from .pipeline import DataConfig, SyntheticLM, make_pipeline  # noqa: F401

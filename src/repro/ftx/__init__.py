@@ -1,0 +1,10 @@
+"""Fault-tolerance layer: CP-LRC erasure-coded state store.
+
+The paper's technique as a first-class framework feature: training state
+(checkpoint shards) is striped across hosts with a CP-LRC; node failures are
+repaired with the paper's local-first algorithms at local-group bandwidth
+instead of k-block global reads.
+"""
+from .stripestore import NodeState, StripeStore, StoreConfig  # noqa: F401
+from .checkpoint import CheckpointManager  # noqa: F401
+from .failures import FailureInjector  # noqa: F401

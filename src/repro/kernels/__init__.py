@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the erasure-coding hot path.
+
+Kernels (each with a pure-jnp oracle in ``ref.py``):
+  gf256_matmul     — bit-serial GF(2^8) matmul (VPU)
+  bitmatrix_encode — CRS select-and-XOR on packed bit-planes (VPU)
+  mod2_matmul_encode — fused unpack/matmul-mod-2/repack (MXU)
+
+``ops.py`` is the dispatch layer used by ``repro.core.codec`` and the
+checkpoint stripe store.
+"""
+from .gf256_matmul import gf256_matmul  # noqa: F401
+from .bitmatrix_encode import bitmatrix_encode, mod2_matmul_encode  # noqa: F401
+from .ops import crs_encode_op, encode_op, gf_matmul_op  # noqa: F401
+from . import ref  # noqa: F401

@@ -1,0 +1,121 @@
+"""Pallas TPU kernels: Cauchy-RS bitmatrix (CRS) encode on packed bit-planes.
+
+Two TPU-native formulations of the same GF(2) product
+``out[i] = XOR_{j : bm[i,j]=1} packets[j]`` (see DESIGN.md §3):
+
+* ``bitmatrix_encode`` — VPU path: select-and-XOR accumulation over packet
+  rows. Zero multiplies; the inner loop is one masked XOR per (row, packet).
+* ``mod2_matmul_encode`` — MXU path (beyond-paper optimization): XOR-sums
+  over GF(2) are ordinary sums mod 2, so unpack bytes to 0/1 bit lanes,
+  run a *real* bf16 matmul on the systolic array (counts <= k*8 << 2^24 are
+  exact in f32 accumulation), reduce mod 2 and repack. The whole
+  unpack->dot->mod2->repack chain is fused in one kernel so the 8x-inflated
+  bit tensor never leaves VMEM.
+
+Inputs use the packed bit-plane layout of ``repro.kernels.ref.packetize``:
+packets (k*8, P) where P = block_bytes / 8.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_BITS = 8
+
+
+# --------------------------------------------------------------------------
+# VPU select-and-XOR path
+# --------------------------------------------------------------------------
+def _bitmatrix_kernel(bm_ref, pk_ref, out_ref, *, k8: int):
+    bm = bm_ref[...].astype(jnp.int32)   # (TR, K8)
+    pk = pk_ref[...].astype(jnp.int32)   # (K8, TP)
+    tr, tp = out_ref.shape
+
+    def step(j, acc):
+        row = jax.lax.dynamic_slice(pk, (j, 0), (1, tp))   # (1, TP)
+        sel = jax.lax.dynamic_slice(bm, (0, j), (tr, 1))   # (TR, 1)
+        # sel is {0,1}: multiply == select; XOR-accumulate.
+        return acc ^ (sel * row)
+
+    acc = jax.lax.fori_loop(0, k8, step, jnp.zeros((tr, tp), jnp.int32))
+    out_ref[...] = acc.astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_r", "tile_p", "interpret"))
+def bitmatrix_encode(bitmatrix: jax.Array, packets: jax.Array, *,
+                     tile_r: int = 8, tile_p: int = 1024,
+                     interpret: bool = False) -> jax.Array:
+    """CRS encode: bitmatrix (R8, K8) {0,1} x packets (K8, P) -> (R8, P)."""
+    r8, k8 = bitmatrix.shape
+    k8b, p = packets.shape
+    if k8 != k8b:
+        raise ValueError(f"shape mismatch {bitmatrix.shape} vs {packets.shape}")
+    tr = min(tile_r, r8)
+    tp = min(tile_p, p)
+    if r8 % tr or p % tp:
+        raise ValueError(f"(R8={r8}, P={p}) must divide tiles ({tr}, {tp})")
+    return pl.pallas_call(
+        functools.partial(_bitmatrix_kernel, k8=k8),
+        grid=(r8 // tr, p // tp),
+        in_specs=[
+            pl.BlockSpec((tr, k8), lambda i, j: (i, 0)),
+            pl.BlockSpec((k8, tp), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tr, tp), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r8, p), jnp.uint8),
+        interpret=interpret,
+    )(bitmatrix, packets)
+
+
+# --------------------------------------------------------------------------
+# MXU mod-2 matmul path
+# --------------------------------------------------------------------------
+def _mod2_kernel(bm_ref, pk_ref, out_ref):
+    bm = bm_ref[...]                       # (R8, K8) bf16 of 0/1
+    pk = pk_ref[...].astype(jnp.int32)     # (K8, TP) packed bytes
+    r8, k8 = bm.shape
+    _, tp = pk.shape
+    # Unpack to bit lanes: (K8, TP, 8) -> (K8, TP*8), values {0,1}.
+    bits = (pk[:, :, None] >> jax.lax.broadcasted_iota(jnp.int32, (1, 1, _BITS), 2)) & 1
+    bits = bits.reshape(k8, tp * _BITS).astype(jnp.bfloat16)
+    # Systolic matmul; f32 accumulation keeps counts (<= k8 < 2^24) exact.
+    counts = jax.lax.dot_general(
+        bm, bits, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    outbits = counts.astype(jnp.int32) & 1                    # (R8, TP*8)
+    outbits = outbits.reshape(r8, tp, _BITS)
+    weights = 1 << jax.lax.broadcasted_iota(jnp.int32, (1, 1, _BITS), 2)
+    out_ref[...] = jnp.sum(outbits * weights, axis=-1).astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_p", "interpret"))
+def mod2_matmul_encode(bitmatrix: jax.Array, packets: jax.Array, *,
+                       tile_p: int = 256, interpret: bool = False) -> jax.Array:
+    """MXU-path CRS encode. bitmatrix (R8, K8) x packets (K8, P) -> (R8, P).
+
+    VMEM per step (defaults, k=128 => K8=1024, TP=256): bits tensor
+    1024 x 2048 bf16 = 4 MB + packets 256 KB + counts R8 x 2048 f32 — fits
+    with double buffering. R8 (<= 72 for the paper's widest r+p) stays whole.
+    """
+    r8, k8 = bitmatrix.shape
+    k8b, p = packets.shape
+    if k8 != k8b:
+        raise ValueError(f"shape mismatch {bitmatrix.shape} vs {packets.shape}")
+    tp = min(tile_p, p)
+    if p % tp:
+        raise ValueError(f"P={p} must divide tile_p={tp}")
+    bm16 = bitmatrix.astype(jnp.bfloat16)
+    return pl.pallas_call(
+        _mod2_kernel,
+        grid=(p // tp,),
+        in_specs=[
+            pl.BlockSpec((r8, k8), lambda j: (0, 0)),
+            pl.BlockSpec((k8, tp), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((r8, tp), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((r8, p), jnp.uint8),
+        interpret=interpret,
+    )(bm16, packets)

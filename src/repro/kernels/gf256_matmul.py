@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: GF(2^8) matrix multiply for stripe encode/decode.
+
+``out[m, B] = XOR_k gfmul(coef[m, k], data[k, B])``
+
+TPU adaptation (see DESIGN.md §3): Jerasure's table-driven SIMD lookups do
+not map to the TPU VPU (no fast byte gather across lanes). Instead each
+scalar coefficient multiplies a whole VMEM tile of data bytes with the
+bit-serial "Russian peasant" algorithm — 8 rounds of conditional-XOR plus an
+``xtime`` step — which lowers to pure int32 lane ops. The coefficient matrix
+is tiny (r x k <= 9 x 128) and rides along as a whole; the byte dimension is
+tiled through VMEM with an explicit BlockSpec grid.
+
+VMEM budget per grid step (defaults, int32 working set):
+  data tile  k x TB x 4      = 128 x 512 x 4  = 256 KB
+  out tile   TM x TB x 4     = 16 x 512 x 4   = 32 KB
+  coef       TM x k x 4      = 8 KB
+comfortably inside the ~16 MB/core VMEM including double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.gf import PRIM_POLY
+
+_XT = PRIM_POLY & 0xFF  # 0x1D: xtime reduction constant
+
+
+def _gf256_matmul_kernel(coef_ref, data_ref, out_ref, *, k: int):
+    """One (TM, TB) output tile: loop data rows, bit-serial GF multiply."""
+    coef = coef_ref[...].astype(jnp.int32)  # (TM, k)
+    data = data_ref[...].astype(jnp.int32)  # (k, TB)
+    tm, tb = out_ref.shape
+
+    def row_step(kk, acc):
+        d = jax.lax.dynamic_slice(data, (kk, 0), (1, tb))       # (1, TB)
+        c = jax.lax.dynamic_slice(coef, (0, kk), (tm, 1))       # (TM, 1)
+        cur = jnp.broadcast_to(d, (tm, tb))
+        cf = jnp.broadcast_to(c, (tm, tb))
+        prod = jnp.zeros((tm, tb), jnp.int32)
+        for _ in range(8):  # unrolled: static 8 rounds, pure VPU ops
+            prod = prod ^ jnp.where((cf & 1) != 0, cur, 0)
+            cur = ((cur << 1) & 0xFF) ^ jnp.where((cur & 0x80) != 0, _XT, 0)
+            cf = cf >> 1
+        return acc ^ prod
+
+    acc = jax.lax.fori_loop(0, k, row_step, jnp.zeros((tm, tb), jnp.int32))
+    out_ref[...] = acc.astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_b", "interpret"))
+def gf256_matmul(coef: jax.Array, data: jax.Array, *,
+                 tile_m: int = 8, tile_b: int = 512,
+                 interpret: bool = False) -> jax.Array:
+    """GF(2^8) product ``coef (m,k) @ data (k,B) -> (m,B)``, all uint8.
+
+    ``interpret=True`` runs the kernel body in the Pallas interpreter (CPU
+    correctness path); on TPU it compiles to a Mosaic kernel.
+    """
+    m, k = coef.shape
+    k2, b = data.shape
+    if k != k2:
+        raise ValueError(f"shape mismatch: coef {coef.shape} vs data {data.shape}")
+    tm = min(tile_m, m)
+    tb = min(tile_b, b)
+    if m % tm or b % tb:
+        raise ValueError(f"(m={m}, B={b}) must divide tiles ({tm}, {tb}); pad first")
+    grid = (m // tm, b // tb)
+    return pl.pallas_call(
+        functools.partial(_gf256_matmul_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, tb), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tb), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, b), jnp.uint8),
+        interpret=interpret,
+    )(coef, data)

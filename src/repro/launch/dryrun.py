@@ -1,0 +1,237 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST precede every other import (jax locks the device count on first
+# init). 512 placeholder host devices back the 2x16x16 production mesh.
+
+"""Multi-pod dry-run driver.
+
+For every (architecture x input-shape) cell, lower + compile the step
+function (train_step / prefill / serve_step) against the production mesh
+with ShapeDtypeStruct stand-ins (zero allocation), then record:
+
+* memory_analysis()  — per-device bytes: proves the configuration fits;
+* cost_analysis()    — per-device HLO FLOPs / bytes for the roofline;
+* collective bytes   — parsed from the post-SPMD HLO text, per collective
+  kind, for the roofline's interconnect term.
+
+Results cache to benchmarks/results/dryrun_<mesh>.json keyed by cell, so
+re-runs only compile missing cells.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh single --arch all
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh multi  --arch grok-1-314b --shape train_4k
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ALIASES, SHAPES, cell_valid, get_model, input_specs
+from repro.dist.sharding import with_rules
+from repro.launch.mesh import make_production_mesh
+from repro.train.train_step import TrainConfig, make_train_step, train_shardings
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results"
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes of every typed shape literal in an HLO result type string."""
+    total = 0
+    for dt, dims in re.findall(r"(\w+)\[([\d,]*)\]", text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, dict[str, int]]:
+    """Per collective kind: summed input/output bytes + op count (the module
+    is the per-device program after SPMD partitioning).
+
+    Wire-byte modeling downstream (repro.launch.roofline): ring algorithms
+    move ~2x payload for all-reduce, ~output for all-gather, ~input for
+    reduce-scatter / all-to-all, ~output for collective-permute.
+    """
+    out = {k: {"in": 0, "out": 0, "count": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?\S+\s*=\s*(\([^)]*\)|\S+)\s+([\w-]+)"
+                     r"(?:\.\d+)?\((.*)$", ls)
+        if not m:
+            continue
+        result_type, opname, args = m.groups()
+        for kind in _COLLECTIVES:
+            if opname == kind or opname == kind + "-start":
+                rec = out[kind]
+                rec["out"] += _shape_bytes(result_type)
+                # operand types are printed inline in post-opt HLO; cut at
+                # the first ')' (end of the operand list) so attributes /
+                # metadata strings can't contribute shape literals. If the
+                # printer elides operand types, approximate in == out.
+                inb = _shape_bytes(args.split(")")[0])
+                rec["in"] += inb if inb else _shape_bytes(result_type)
+                rec["count"] += 1
+                break
+    return out
+
+
+def lower_cell(arch: str, shape: str, mesh, *, smoke: bool = False,
+               tc: TrainConfig | None = None, donate: bool = True,
+               extra_rules: dict | None = None, unroll: bool = False):
+    """Lower + compile one cell. Returns (record, lowered, compiled).
+
+    ``unroll=True`` fully unrolls the layer scan so cost_analysis reports
+    true per-step FLOPs/bytes (XLA visits while bodies once) — used for the
+    roofline table; the scan variant stays the production default.
+    """
+    spec = SHAPES[shape]
+    if unroll:
+        import dataclasses as _dc
+
+        from repro.configs import get_config
+        from repro.models.registry import build
+        api = build(_dc.replace(get_config(arch, smoke), scan_unroll=True))
+    else:
+        api = get_model(arch, smoke=smoke)
+    with with_rules(mesh, extra_rules) as mr:
+        specs = input_specs(arch, shape, smoke=smoke)
+        if spec.kind == "train":
+            step = make_train_step(api, tc)
+            sh = train_shardings(api, mr, specs["batch"])
+            params_abs = api.abstract_params()
+            opt_abs = jax.eval_shape(
+                lambda p: __import__("repro.train.optimizer", fromlist=["x"])
+                .adamw_init(p), params_abs)
+            jitted = jax.jit(
+                step,
+                in_shardings=(sh["params"], sh["opt_state"], sh["batch"]),
+                out_shardings=(sh["params"], sh["opt_state"], None),
+                donate_argnums=(0, 1) if donate else ())
+            lowered = jitted.lower(params_abs, opt_abs, specs["batch"])
+        elif spec.kind == "prefill":
+            from repro.train.train_step import batch_shardings, param_shardings
+            psh = param_shardings(api, mr)
+            bsh = batch_shardings(specs["batch"], mr)
+            jitted = jax.jit(api.prefill, in_shardings=(psh, bsh))
+            lowered = jitted.lower(api.abstract_params(), specs["batch"])
+        else:  # decode
+            from repro.launch.serve_shardings import cache_shardings
+            from repro.train.train_step import param_shardings
+            from repro.dist.sharding import _resolve
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            psh = param_shardings(api, mr)
+            csh = cache_shardings(specs["caches"], mr)
+            tsh = NamedSharding(mr.mesh, _resolve(
+                specs["tokens"].shape, ("batch", None), mr))
+            ish = NamedSharding(mr.mesh, P())
+            jitted = jax.jit(api.decode_step,
+                             in_shardings=(psh, csh, tsh, ish),
+                             donate_argnums=(1,) if donate else ())
+            lowered = jitted.lower(api.abstract_params(), specs["caches"],
+                                   specs["tokens"], specs["index"])
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+
+    record = {"arch": arch, "shape": shape, "kind": spec.kind,
+              "mesh": dict(mesh.shape), "compile_s": round(compile_s, 1)}
+    try:
+        mem = compiled.memory_analysis()
+        record["memory"] = {
+            k: int(getattr(mem, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)}
+    except Exception as e:  # pragma: no cover
+        record["memory"] = {"error": str(e)}
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        record["cost"] = {k: float(v) for k, v in cost.items()
+                          if isinstance(v, (int, float)) and
+                          (k in ("flops", "bytes accessed", "optimal_seconds")
+                           or k.startswith("bytes accessed"))}
+    except Exception as e:  # pragma: no cover
+        record["cost"] = {"error": str(e)}
+    try:
+        record["collectives"] = collective_bytes(compiled.as_text())
+    except Exception:
+        record["collectives"] = collective_bytes(lowered.as_text())
+    return record, lowered, compiled
+
+
+def run(meshname: str, archs: list[str], shapes: list[str],
+        force: bool = False, unroll: bool = False) -> dict:
+    mesh = make_production_mesh(multi_pod=(meshname == "multi"))
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    suffix = "_unrolled" if unroll else ""
+    path = RESULTS_DIR / f"dryrun_{meshname}{suffix}.json"
+    results = json.loads(path.read_text()) if path.exists() else {}
+    for arch in archs:
+        for shape in shapes:
+            key = f"{arch}|{shape}"
+            ok, reason = cell_valid(arch, shape)
+            if not ok:
+                results[key] = {"arch": arch, "shape": shape, "skip": reason}
+                continue
+            if key in results and not force and "error" not in results[key]:
+                print(f"[cached] {key}")
+                continue
+            print(f"[lower ] {key} ...", flush=True)
+            t0 = time.time()
+            # batch=1 long-context: context-parallel-shard the KV length
+            # axis over the idle "data" axis instead of replicating 512k KV.
+            extra = ({"kv_seq": ("data",)}
+                     if SHAPES[shape].global_batch < 16 else None)
+            try:
+                record, _, _ = lower_cell(arch, shape, mesh,
+                                          extra_rules=extra, unroll=unroll)
+                results[key] = record
+                print(f"[ok    ] {key} compile={record['compile_s']}s "
+                      f"total={time.time() - t0:.0f}s", flush=True)
+            except Exception as e:
+                results[key] = {"arch": arch, "shape": shape,
+                                "error": f"{type(e).__name__}: {e}"}
+                print(f"[FAIL  ] {key}: {e}\n{traceback.format_exc()}",
+                      flush=True)
+            path.write_text(json.dumps(results, indent=1, sort_keys=True))
+    path.write_text(json.dumps(results, indent=1, sort_keys=True))
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", choices=("single", "multi"), default="single")
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--unroll", action="store_true",
+                    help="unroll layer scans for exact roofline cost counts")
+    args = ap.parse_args()
+    archs = list(ALIASES) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    results = run(args.mesh, archs, shapes, force=args.force,
+                  unroll=args.unroll)
+    bad = [k for k, v in results.items() if "error" in v]
+    print(f"\n{len(results) - len(bad)}/{len(results)} cells ok; "
+          f"failures: {bad or 'none'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,157 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ must precede jax init (see dryrun.py).
+
+"""§Perf hillclimbing harness.
+
+Lowers one (arch x shape) cell under a sequence of named variants (config /
+sharding overrides), compiles each, and prints the roofline-term deltas —
+the hypothesis -> change -> measure loop of EXPERIMENTS.md §Perf as one
+command:
+
+  PYTHONPATH=src python -m repro.launch.perf_iter --arch qwen2.5-3b \
+      --shape train_4k --variants baseline,flash2048 [--unroll]
+"""
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+
+from repro.configs import SHAPES, get_config, input_specs
+from repro.dist.sharding import with_rules
+from repro.launch.dryrun import collective_bytes
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import HBM_BW, LINK_BW, PEAK_FLOPS, wire_bytes
+from repro.models.registry import build
+from repro.train.train_step import TrainConfig, make_train_step, train_shardings
+
+# variant name -> (config overrides, rule overrides, train overrides)
+VARIANTS = {
+    "baseline": ({}, None, {}),
+    "flash1024": ({"attn_chunk": 1024}, None, {}),
+    "flash2048": ({"attn_chunk": 2048}, None, {}),
+    "flash4096": ({"attn_chunk": 4096}, None, {}),
+    "seqshard": ({}, {"seq": ("model",)}, {}),  # sequence-parallel activations
+    "flash2048+seqshard": ({"attn_chunk": 2048}, {"seq": ("model",)}, {}),
+    "micro2": ({}, None, {"microbatches": 2}),
+    "micro4": ({}, None, {"microbatches": 4}),
+    "flash2048+micro4": ({"attn_chunk": 2048}, None, {"microbatches": 4}),
+    "nofsdp": ({"fsdp_params": False}, None, {}),
+    "flash2048+nofsdp": ({"attn_chunk": 2048, "fsdp_params": False}, None, {}),
+    "moegroup512": ({"moe_group_size": 512}, None, {}),
+    "flash2048+moegroup512": ({"attn_chunk": 2048, "moe_group_size": 512},
+                              None, {}),
+}
+
+
+def measure(arch: str, shape: str, variant: str, *, unroll: bool,
+            multi_pod: bool = False) -> dict:
+    cfg_over, rules_over, train_over = VARIANTS[variant]
+    cfg = dataclasses.replace(get_config(arch), scan_unroll=unroll, **cfg_over)
+    api = build(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    spec = SHAPES[shape]
+    tc = TrainConfig(**train_over) if train_over else None
+    with with_rules(mesh, rules_over) as mr:
+        specs = input_specs(arch, shape)
+        if spec.kind == "train":
+            from repro.train.optimizer import adamw_init
+
+            step = make_train_step(api, tc)
+            sh = train_shardings(api, mr, specs["batch"])
+            params_abs = api.abstract_params()
+            opt_abs = jax.eval_shape(adamw_init, params_abs)
+            jitted = jax.jit(step,
+                             in_shardings=(sh["params"], sh["opt_state"],
+                                           sh["batch"]),
+                             out_shardings=(sh["params"], sh["opt_state"],
+                                            None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_abs, opt_abs, specs["batch"])
+        elif spec.kind == "prefill":
+            from repro.train.train_step import batch_shardings, param_shardings
+
+            psh = param_shardings(api, mr)
+            bsh = batch_shardings(specs["batch"], mr)
+            jitted = jax.jit(api.prefill, in_shardings=(psh, bsh))
+            lowered = jitted.lower(api.abstract_params(), specs["batch"])
+        else:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            from repro.dist.sharding import _resolve
+            from repro.launch.serve_shardings import cache_shardings
+            from repro.train.train_step import param_shardings
+
+            psh = param_shardings(api, mr)
+            csh = cache_shardings(specs["caches"], mr)
+            tsh = NamedSharding(mr.mesh, _resolve(specs["tokens"].shape,
+                                                  ("batch", None), mr))
+            jitted = jax.jit(api.decode_step,
+                             in_shardings=(psh, csh, tsh,
+                                           NamedSharding(mr.mesh, P())),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(api.abstract_params(), specs["caches"],
+                                   specs["tokens"], specs["index"])
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    coll = collective_bytes(compiled.as_text())
+    flops = float(cost.get("flops", 0.0))
+    hbytes = float(cost.get("bytes accessed", 0.0))
+    wb = wire_bytes(coll)
+    return {
+        "variant": variant, "compile_s": round(compile_s, 1),
+        "temp_gb": mem.temp_size_in_bytes / 2**30,
+        "flops_per_dev": flops, "bytes_per_dev": hbytes,
+        "wire_bytes_per_dev": wb,
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": hbytes / HBM_BW,
+        "collective_s": wb / LINK_BW,
+        "collectives": {k: v for k, v in coll.items() if v["count"]},
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variants", default="baseline,flash2048")
+    ap.add_argument("--unroll", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    rows = []
+    for v in args.variants.split(","):
+        print(f"[perf] {args.arch}|{args.shape} variant={v} ...", flush=True)
+        try:
+            r = measure(args.arch, args.shape, v, unroll=args.unroll,
+                        multi_pod=args.multi_pod)
+        except Exception as e:
+            r = {"variant": v, "error": f"{type(e).__name__}: {e}"}
+        rows.append(r)
+        print(json.dumps(r, indent=1, default=str), flush=True)
+    base = next((r for r in rows if r["variant"] == "baseline"
+                 and "error" not in r), None)
+    if base:
+        print("\nvariant            temp_gb  compute_s  memory_s  coll_s")
+        for r in rows:
+            if "error" in r:
+                print(f"{r['variant']:18s} ERROR {r['error'][:60]}")
+                continue
+            print(f"{r['variant']:18s} {r['temp_gb']:8.1f} "
+                  f"{r['compute_s']:9.4f} {r['memory_s']:9.4f} "
+                  f"{r['collective_s']:7.4f}")
+    if args.out:
+        from pathlib import Path
+
+        Path(args.out).write_text(json.dumps(rows, indent=1, default=str))
+
+
+if __name__ == "__main__":
+    main()

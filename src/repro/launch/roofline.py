@@ -1,0 +1,156 @@
+"""Roofline analysis from dry-run artifacts (deliverable g).
+
+Terms per (arch x shape) cell, all per-chip and in seconds (TPU v5e):
+
+  compute    = HLO_FLOPs / 197e12            (bf16 peak per chip)
+  memory     = HLO_bytes / 819e9             (HBM stream bandwidth)
+  collective = wire_bytes / 50e9             (one ICI link, conservative)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` of the
+*unrolled* dry-run (the scan variant undercounts loop bodies — see
+EXPERIMENTS.md §Dry-run); wire_bytes follow the ring models:
+2x for all-reduce, output for all-gather / collective-permute, input for
+reduce-scatter / all-to-all.
+
+``HLO bytes accessed`` counts every operand+result touch, i.e. an upper
+bound on HBM traffic (fusion keeps much of it in VMEM/registers); the memory
+term is therefore pessimistic — noted per row.
+
+MODEL_FLOPS uses the classic accounting: train 6·N_active·tokens,
+prefill 2·N_active·tokens, decode 2·N_active·batch per step. The
+``useful`` column is MODEL_FLOPS / (chips · HLO_FLOPs) — remat & dispatch
+overhead shows up here. ``roofline_frac`` = compute / max(all terms): the
+fraction of the bounding resource's time spent at peak compute.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results"
+
+_WIRE = {"all-reduce": ("in", 2.0), "all-gather": ("out", 1.0),
+         "reduce-scatter": ("in", 1.0), "all-to-all": ("in", 1.0),
+         "collective-permute": ("out", 1.0)}
+
+
+def wire_bytes(coll: dict) -> float:
+    total = 0.0
+    for kind, (field, mult) in _WIRE.items():
+        rec = coll.get(kind, {})
+        if isinstance(rec, dict):
+            total += mult * rec.get(field, 0)
+        else:  # legacy scalar format
+            total += mult * rec
+    return total
+
+
+def model_flops(arch: str, shape: str) -> float:
+    from repro.configs import SHAPES, get_model
+
+    api = get_model(arch)
+    spec = SHAPES[shape]
+    n_active = api.active_param_count()
+    if spec.kind == "train":
+        return 6.0 * n_active * spec.seq_len * spec.global_batch
+    if spec.kind == "prefill":
+        return 2.0 * n_active * spec.seq_len * spec.global_batch
+    return 2.0 * n_active * spec.global_batch  # decode: one token / sequence
+
+
+def _advice(dom: str, row: dict) -> str:
+    if dom == "collective":
+        k = max(row["coll_detail"], key=lambda kk: row["coll_detail"][kk])
+        return (f"dominated by {k}: reshard to turn it into overlapped "
+                f"reduce-scatter/all-gather or shrink the payload dtype")
+    if dom == "memory":
+        if row["useful"] < 0.4:
+            return ("HBM-bound with low useful-FLOP ratio: cut remat "
+                    "recompute / fuse dispatch einsums")
+        return "HBM-bound: fuse elementwise chains, widen arithmetic intensity"
+    if row["useful"] < 0.5:
+        return "compute-bound but half the FLOPs are overhead: fix remat/dispatch"
+    return "near compute roofline: only kernel-level wins left"
+
+
+def build_table(mesh: str = "single") -> list[dict]:
+    from repro.configs import ALIASES, SHAPES, cell_valid
+
+    unrolled = RESULTS_DIR / f"dryrun_{mesh}_unrolled.json"
+    scan = RESULTS_DIR / f"dryrun_{mesh}.json"
+    data = {}
+    if scan.exists():
+        data.update(json.loads(scan.read_text()))
+    udata = json.loads(unrolled.read_text()) if unrolled.exists() else {}
+    rows = []
+    for arch in ALIASES:
+        for shape in SHAPES:
+            key = f"{arch}|{shape}"
+            ok, reason = cell_valid(arch, shape)
+            if not ok:
+                rows.append({"arch": arch, "shape": shape, "skip": reason})
+                continue
+            rec = udata.get(key) or data.get(key)
+            if not rec or "cost" not in rec or "flops" not in rec.get("cost", {}):
+                rows.append({"arch": arch, "shape": shape,
+                             "skip": "no dry-run record"})
+                continue
+            chips = 1
+            for v in rec["mesh"].values():
+                chips *= v
+            flops = rec["cost"]["flops"]
+            hbytes = rec["cost"].get("bytes accessed", 0.0)
+            coll = rec.get("collectives", {})
+            wb = wire_bytes(coll)
+            compute_s = flops / PEAK_FLOPS
+            memory_s = hbytes / HBM_BW
+            coll_s = wb / LINK_BW
+            terms = {"compute": compute_s, "memory": memory_s,
+                     "collective": coll_s}
+            dom = max(terms, key=terms.get)
+            mf = model_flops(arch, shape)
+            useful = mf / (chips * flops) if flops else 0.0
+            row = {
+                "arch": arch, "shape": shape, "kind": rec["kind"],
+                "chips": chips, "unrolled": key in udata,
+                "flops_per_chip": flops, "bytes_per_chip": hbytes,
+                "wire_bytes_per_chip": wb,
+                "compute_s": compute_s, "memory_s": memory_s,
+                "collective_s": coll_s, "dominant": dom,
+                "model_flops": mf, "useful": useful,
+                "mfu_like": compute_s / max(max(terms.values()), 1e-30),
+                "coll_detail": {k: (v.get("out", 0) if isinstance(v, dict)
+                                    else v) for k, v in coll.items()},
+                "memory_bytes_per_device": rec.get("memory", {}),
+            }
+            row["advice"] = _advice(dom, row)
+            rows.append(row)
+    return rows
+
+
+def render(rows: list[dict]) -> str:
+    hdr = (f"{'arch':22s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+           f"{'coll_s':>10s} {'dominant':>10s} {'useful':>7s} {'frac':>6s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if r.get("skip"):
+            lines.append(f"{r['arch']:22s} {r['shape']:12s} SKIP: {r['skip']}")
+            continue
+        lines.append(
+            f"{r['arch']:22s} {r['shape']:12s} {r['compute_s']:10.4f} "
+            f"{r['memory_s']:10.4f} {r['collective_s']:10.4f} "
+            f"{r['dominant']:>10s} {r['useful']:7.3f} {r['mfu_like']:6.3f}")
+    return "\n".join(lines)
+
+
+def main() -> None:  # pragma: no cover
+    print(render(build_table()))
+
+
+if __name__ == "__main__":
+    main()

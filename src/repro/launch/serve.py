@@ -1,0 +1,40 @@
+"""Serving CLI: run the continuous-batching engine on a reduced config.
+
+PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --requests 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_model
+from repro.serve.engine import ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    args = ap.parse_args()
+    api = get_model(args.arch, smoke=True)
+    engine = ServeEngine(api, max_batch=args.max_batch, max_len=args.max_len)
+    engine.load(api.init_params(jax.random.key(0)))
+    rng = np.random.default_rng(0)
+    reqs = [engine.submit(rng.integers(0, api.cfg.vocab_size,
+                                       int(rng.integers(4, 32))),
+                          max_new=args.max_new)
+            for _ in range(args.requests)]
+    t0 = time.time()
+    engine.run()
+    toks = sum(len(r.out_tokens) for r in reqs)
+    print(f"{len(reqs)} requests -> {toks} tokens in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Sharding specs for decode caches, dispatched on cache node types."""
+from __future__ import annotations
+
+from jax.sharding import NamedSharding
+
+from repro.dist.sharding import MeshRules, _resolve
+from repro.models.attention import KVCache
+from repro.models.ssm import SSMCache
+
+
+def cache_shardings(caches, mr: MeshRules):
+    """Map a cache pytree (ShapeDtypeStructs) to NamedShardings.
+
+    Layer-stacked attention KV: (R, B, L, KV, hd) -> batch + kv_heads.
+    SSM conv (R, B, 3, C) -> batch + inner; SSM state (R, B, H, P, N) ->
+    batch + inner(on H). Encoder-decoder memory tuples look like KV leaves
+    (rank-5 bf16) and take the KV layout.
+    """
+
+    def walk(node):
+        if isinstance(node, KVCache):
+            return KVCache(k=_ns(node.k, mr, kv=True), v=_ns(node.v, mr, kv=True))
+        if isinstance(node, SSMCache):
+            return SSMCache(
+                conv=NamedSharding(mr.mesh, _resolve(
+                    node.conv.shape, (None, "batch", None, "inner"), mr)),
+                state=NamedSharding(mr.mesh, _resolve(
+                    node.state.shape, (None, "batch", "inner", None, None), mr)),
+            )
+        if isinstance(node, (list, tuple)):
+            t = type(node)
+            if hasattr(node, "_fields"):  # other namedtuples
+                return t(*(walk(x) for x in node))
+            return t(walk(x) for x in node)
+        # bare array leaf (e.g. encdec memory): rank-5 KV layout
+        return _ns(node, mr, kv=True)
+
+    return walk(caches)
+
+
+def _ns(leaf, mr: MeshRules, kv: bool):
+    # Rank-5 KV: (layers, batch, length, kv_heads, head_dim). "kv_seq" is
+    # inert by default; long-context cells map it to ("data",) so a 512k
+    # batch=1 cache context-parallel-shards instead of replicating (GSPMD
+    # turns the softmax reductions into all-reduces over "data").
+    names = (None, "batch", "kv_seq", "kv_heads", None)[:len(leaf.shape)]
+    if len(leaf.shape) != 5:
+        names = ("batch",) + (None,) * (len(leaf.shape) - 1)
+    return NamedSharding(mr.mesh, _resolve(leaf.shape, names, mr))

@@ -1,0 +1,4 @@
+"""Composable model library: GQA transformers, MoE, Mamba2/SSD, hybrids,
+encoder-decoder — pure-pytree JAX, layer-stacked under lax.scan."""
+from .common import ModelConfig  # noqa: F401
+from .registry import ModelApi, build  # noqa: F401

@@ -1,0 +1,284 @@
+"""Grouped-query attention: training/prefill (full + sliding window) and
+cached single-token decode. GQA never materializes repeated KV heads — score
+einsums keep a (kv_heads, q_per_kv) split so memory matches the cache.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import shard_activation
+
+from .common import ModelConfig, dense_init, rope
+
+NEG_INF = -1e30
+
+
+class AttnParams(NamedTuple):
+    wq: jax.Array            # (d, H, hd)
+    wk: jax.Array            # (d, KV, hd)
+    wv: jax.Array            # (d, KV, hd)
+    wo: jax.Array            # (H, hd, d)
+    bq: Optional[jax.Array]  # (H, hd) or None
+    bk: Optional[jax.Array]
+    bv: Optional[jax.Array]
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S_max, KV, hd)
+    v: jax.Array
+
+
+def init_attn(key, cfg: ModelConfig) -> AttnParams:
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    mk = lambda kk, shape: dense_init(kk, shape, cfg.param_dtype)
+    bias = (lambda shape: jnp.zeros(shape, cfg.param_dtype)) if cfg.qkv_bias else (lambda shape: None)
+    return AttnParams(
+        wq=mk(ks[0], (d, cfg.num_heads, hd)),
+        wk=mk(ks[1], (d, cfg.num_kv_heads, hd)),
+        wv=mk(ks[2], (d, cfg.num_kv_heads, hd)),
+        wo=mk(ks[3], (cfg.num_heads, hd, d)),
+        bq=bias((cfg.num_heads, hd)),
+        bk=bias((cfg.num_kv_heads, hd)),
+        bv=bias((cfg.num_kv_heads, hd)),
+    )
+
+
+def attn_param_logical(cfg: ModelConfig) -> AttnParams:
+    """Logical axis names per parameter (layer-stacked callers prepend None).
+    Bias entries are None when the config has no QKV bias, matching the
+    params pytree structure exactly."""
+    b = cfg.qkv_bias
+    return AttnParams(
+        wq=(None, "heads", None), wk=(None, "kv_heads", None),
+        wv=(None, "kv_heads", None), wo=("heads", None, None),
+        bq=("heads", None) if b else None,
+        bk=("kv_heads", None) if b else None,
+        bv=("kv_heads", None) if b else None,
+    )
+
+
+def _project_qkv(p: AttnParams, x: jax.Array, positions, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, p.wq)
+    k = jnp.einsum("bsd,dgk->bsgk", x, p.wk)
+    v = jnp.einsum("bsd,dgk->bsgk", x, p.wv)
+    if p.bq is not None:
+        q, k, v = q + p.bq, k + p.bk, v + p.bv
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = shard_activation(q, "batch", None, "heads", None)
+    k = shard_activation(k, "batch", None, "kv_heads", None)
+    v = shard_activation(v, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """q (B,S,H,hd) x k (B,T,KV,hd) -> (B, KV, qpk, S, T) in f32."""
+    b, s, h, hd = q.shape
+    kv = cfg.num_kv_heads
+    qg = q.reshape(b, s, kv, cfg.q_per_kv, hd)
+    scores = jnp.einsum("bsgqk,btgk->bgqst", qg, k,
+                        preferred_element_type=jnp.float32)
+    return scores / jnp.sqrt(jnp.float32(hd)).astype(jnp.float32)
+
+
+def _gqa_out(probs: jax.Array, v: jax.Array, wo: jax.Array) -> jax.Array:
+    """probs (B,KV,qpk,S,T) x v (B,T,KV,hd) -> (B,S,d)."""
+    ctx = jnp.einsum("bgqst,btgk->bsgqk", probs, v)
+    b, s, g, qpk, hd = ctx.shape
+    ctx = ctx.reshape(b, s, g * qpk, hd).astype(wo.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", ctx, wo)
+    return shard_activation(out, "batch", "seq", None)
+
+
+def attention(p: AttnParams, x: jax.Array, cfg: ModelConfig,
+              window: int = 0) -> jax.Array:
+    """Causal self-attention over x (B,S,d); window>0 = sliding window."""
+    out, _ = _attention_impl(p, x, cfg, window, want_cache=False)
+    return out
+
+
+def prefill_attention(p: AttnParams, x: jax.Array, cfg: ModelConfig,
+                      window: int = 0) -> tuple[jax.Array, KVCache]:
+    """Causal attention that also emits the KV cache for decode.
+
+    Global layers cache all S positions. Sliding-window layers cache the last
+    ``window`` positions laid out in ring-buffer order (position t at slot
+    t %% window) so ``decode_attention`` continues seamlessly at index S.
+    """
+    return _attention_impl(p, x, cfg, window, want_cache=True)
+
+
+def _attention_impl(p: AttnParams, x: jax.Array, cfg: ModelConfig,
+                    window: int, want_cache: bool):
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _project_qkv(p, x, positions, cfg)
+    if cfg.attn_chunk and s > cfg.attn_chunk:
+        out = _chunked_causal_attention(q, k, v, p.wo, cfg, window)
+    else:
+        scores = _gqa_scores(q, k, cfg)
+        i = jnp.arange(s)[:, None]
+        j = jnp.arange(s)[None, :]
+        mask = j <= i
+        if window:
+            mask &= (i - j) < window
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = _gqa_out(probs, v, p.wo)
+    cache = None
+    if want_cache:
+        if window and s >= window:
+            offset = (s - window) % window
+            kc = jnp.roll(k[:, s - window:], offset, axis=1)
+            vc = jnp.roll(v[:, s - window:], offset, axis=1)
+        else:
+            kc, vc = k, v
+        cache = KVCache(k=kc.astype(jnp.bfloat16), v=vc.astype(jnp.bfloat16))
+    return out, cache
+
+
+def _chunked_causal_attention(q, k, v, wo, cfg: ModelConfig,
+                              window: int) -> jax.Array:
+    """Flash-style tiled attention (beyond-paper §Perf optimization).
+
+    Double scan — outer over query chunks, inner over KV chunks with the
+    online-softmax recurrence — so the (S, T) score matrix never
+    materializes: peak extra memory is one (B, KV, qpk, Qc, Tc) tile. The
+    inner body is rematerialized, so backward recomputes score tiles instead
+    of saving them. Enabled via ``cfg.attn_chunk``.
+    """
+    b, s, h, hd = q.shape
+    kv = cfg.num_kv_heads
+    qpk = cfg.q_per_kv
+    qc = min(cfg.attn_chunk, s)
+    tc = min(cfg.attn_chunk, s)
+    assert s % qc == 0 and s % tc == 0, (s, qc, tc)
+    nq, nt = s // qc, s // tc
+    scale = 1.0 / np.sqrt(hd)
+
+    qg = q.reshape(b, nq, qc, kv, qpk, hd)
+    kg = k.reshape(b, nt, tc, kv, hd)
+    vg = v.reshape(b, nt, tc, kv, hd)
+
+    def q_block(qi, q_tile):
+        # q_tile: (B, Qc, KV, qpk, hd)
+        m0 = jnp.full((b, kv, qpk, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, kv, qpk, qc), jnp.float32)
+        a0 = jnp.zeros((b, kv, qpk, qc, hd), jnp.float32)
+
+        def kv_step(carry, inputs):
+            m, l, acc = carry
+            kj, vj, tj = inputs  # (B, Tc, KV, hd), (B, Tc, KV, hd), scalar
+            sc = jnp.einsum("bqgph,btgh->bgpqt", q_tile, kj,
+                            preferred_element_type=jnp.float32) * scale
+            qpos = qi * qc + jnp.arange(qc)[:, None]
+            kpos = tj * tc + jnp.arange(tc)[None, :]
+            mask = kpos <= qpos
+            if window:
+                mask &= (qpos - kpos) < window
+            sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+            alpha = jnp.exp(m - m_new)
+            pr = jnp.exp(sc - m_new[..., None])
+            l = l * alpha + jnp.sum(pr, axis=-1)
+            pv = jnp.einsum("bgpqt,btgh->bgpqh", pr.astype(vj.dtype), vj)
+            acc = acc * alpha[..., None] + pv.astype(jnp.float32)
+            return (m_new, l, acc), None
+
+        body = jax.checkpoint(kv_step, prevent_cse=False)
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0),
+            (jnp.moveaxis(kg, 1, 0), jnp.moveaxis(vg, 1, 0),
+             jnp.arange(nt)), unroll=cfg.scan_unroll)
+        out = acc / jnp.maximum(l[..., None], 1e-30)   # (B,KV,qpk,Qc,hd)
+        return jnp.moveaxis(out, 3, 1)                  # (B,Qc,KV,qpk,hd)
+
+    tiles = []
+    for qi in range(nq):  # static unroll keeps per-tile HLO simple
+        tiles.append(q_block(qi, qg[:, qi]))
+    ctx = jnp.concatenate(tiles, axis=1) if nq > 1 else tiles[0]
+    ctx = ctx.reshape(b, s, h, hd).astype(wo.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", ctx, wo)
+    return shard_activation(out, "batch", "seq", None)
+
+
+def cross_attention(p: AttnParams, x: jax.Array, mem_k: jax.Array,
+                    mem_v: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Decoder cross-attention against precomputed encoder K/V (B,T,KV,hd)."""
+    b, s, _ = x.shape
+    positions = jnp.zeros((b, s), jnp.int32)  # no RoPE offset on cross-attn
+    q = jnp.einsum("bsd,dhk->bshk", x, p.wq)
+    if p.bq is not None:
+        q = q + p.bq
+    q = shard_activation(q, "batch", None, "heads", None)
+    scores = _gqa_scores(q, mem_k, cfg)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return _gqa_out(probs, mem_v, p.wo)
+
+
+def project_memory_kv(p: AttnParams, mem: jax.Array) -> tuple[jax.Array, jax.Array]:
+    k = jnp.einsum("btd,dgk->btgk", mem, p.wk)
+    v = jnp.einsum("btd,dgk->btgk", mem, p.wv)
+    if p.bk is not None:
+        k, v = k + p.bk, v + p.bv
+    return k, v
+
+
+# --------------------------------------------------------------------------
+# cached decode
+# --------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> KVCache:
+    hd = cfg.resolved_head_dim
+    shape = (batch, max_len, cfg.num_kv_heads, hd)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def cache_logical() -> KVCache:
+    return KVCache(k=("batch", None, "kv_heads", None),
+                   v=("batch", None, "kv_heads", None))
+
+
+def decode_attention(p: AttnParams, x: jax.Array, cache: KVCache,
+                     index: jax.Array, cfg: ModelConfig,
+                     window: int = 0) -> tuple[jax.Array, KVCache]:
+    """One-token step. x: (B,1,d); index: current position — a scalar
+    (lockstep batch; dry-run serve_step) or per-row (B,) vector (continuous
+    batching in the serve engine).
+
+    For sliding-window layers the cache is a ring buffer of size ``window``;
+    for global layers it holds the full context.
+    """
+    b = x.shape[0]
+    per_row = index.ndim == 1
+    idx_rows = (index if per_row else jnp.broadcast_to(index, (b,))).astype(jnp.int32)
+    positions = idx_rows[:, None]
+    q, k_new, v_new = _project_qkv(p, x, positions, cfg)
+    max_len = cache.k.shape[1]
+    slots = idx_rows % jnp.int32(max_len) if window else idx_rows
+    if per_row:
+        rows = jnp.arange(b)
+        k = cache.k.at[rows, slots].set(k_new[:, 0].astype(cache.k.dtype))
+        v = cache.v.at[rows, slots].set(v_new[:, 0].astype(cache.v.dtype))
+    else:
+        k = jax.lax.dynamic_update_slice(
+            cache.k, k_new.astype(cache.k.dtype), (0, slots[0], 0, 0))
+        v = jax.lax.dynamic_update_slice(
+            cache.v, v_new.astype(cache.v.dtype), (0, slots[0], 0, 0))
+    scores = _gqa_scores(q, k, cfg)  # (B,KV,qpk,1,S_max)
+    t = jnp.arange(max_len)[None, :]
+    if window:
+        # ring: every slot is live once the context has wrapped
+        valid = (t <= slots[:, None]) | (idx_rows[:, None] >= jnp.int32(max_len))
+    else:
+        valid = t <= idx_rows[:, None]
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs, v, p.wo)
+    return out, KVCache(k=k, v=v)

@@ -1,0 +1,254 @@
+"""Layer assembly: period-structured stacks under ``lax.scan``.
+
+A model is a *period* of layer positions repeated R times
+(num_layers = R * period). Uniform models have period 1; gemma3 uses a
+6-layer period (5 sliding-window + 1 global attention); jamba an 8-layer
+period (7 Mamba + 1 attention, MoE on odd positions). Parameters and KV/SSM
+caches stack along a leading R axis per position, and the whole depth runs
+as one ``lax.scan`` over periods with ``jax.checkpoint`` on the body —
+compile time and HLO size stay O(period), not O(depth).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_lib
+from . import mlp as mlp_lib
+from . import ssm as ssm_lib
+from .common import ModelConfig, rms_norm
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: str  # "attn" | "attn_local" | "ssm"
+    ffn: str    # "mlp" | "moe" | "none"
+
+
+def build_period(cfg: ModelConfig) -> list[LayerSpec]:
+    """Derive the layer period from the config's structural knobs."""
+    period_len = 1
+    if cfg.local_global_period:
+        period_len = cfg.local_global_period
+    if cfg.attn_period:
+        period_len = max(period_len, cfg.attn_period)
+    if cfg.num_experts and cfg.moe_every > 1:
+        period_len = max(period_len, cfg.moe_every)
+    if cfg.num_layers % period_len:
+        raise ValueError(f"{cfg.name}: {cfg.num_layers} layers not divisible "
+                         f"by period {period_len}")
+    specs = []
+    for i in range(period_len):
+        if not cfg.is_attn_layer(i):
+            mixer = "ssm"
+        elif cfg.is_global_attn_layer(i) or not cfg.sliding_window:
+            mixer = "attn"
+        else:
+            mixer = "attn_local"
+        if cfg.d_ff == 0 and not cfg.num_experts:
+            ffn = "none"
+        elif cfg.is_moe_layer(i):
+            ffn = "moe"
+        else:
+            ffn = "mlp"
+        specs.append(LayerSpec(mixer=mixer, ffn=ffn))
+    return specs
+
+
+class LayerParams(NamedTuple):
+    norm1: jax.Array
+    mixer: PyTree            # AttnParams | SSMParams
+    norm2: Optional[jax.Array]
+    ffn: Optional[PyTree]    # MLPParams | MoEParams | None
+
+
+def init_layer(key, spec: LayerSpec, cfg: ModelConfig) -> LayerParams:
+    k1, k2 = jax.random.split(key)
+    if spec.mixer == "ssm":
+        mixer = ssm_lib.init_ssm(k1, cfg)
+    else:
+        mixer = attn_lib.init_attn(k1, cfg)
+    if spec.ffn == "moe":
+        ffn = mlp_lib.init_moe(k2, cfg)
+    elif spec.ffn == "mlp":
+        ffn = mlp_lib.init_mlp(k2, cfg)
+    else:
+        ffn = None
+    g = jnp.ones((cfg.d_model,), cfg.param_dtype)
+    return LayerParams(norm1=g, mixer=mixer,
+                       norm2=g if ffn is not None else None, ffn=ffn)
+
+
+def layer_param_logical(spec: LayerSpec, cfg: ModelConfig) -> LayerParams:
+    mixer = (ssm_lib.ssm_param_logical() if spec.mixer == "ssm"
+             else attn_lib.attn_param_logical(cfg))
+    if spec.ffn == "moe":
+        ffn = mlp_lib.moe_param_logical(cfg)
+    elif spec.ffn == "mlp":
+        ffn = mlp_lib.mlp_param_logical()
+    else:
+        ffn = None
+    return LayerParams(norm1=(None,), mixer=mixer,
+                       norm2=(None,) if ffn is not None else None, ffn=ffn)
+
+
+def apply_layer(spec: LayerSpec, p: LayerParams, x: jax.Array,
+                cfg: ModelConfig) -> jax.Array:
+    h = rms_norm(x, p.norm1, cfg.norm_eps)
+    if spec.mixer == "ssm":
+        x = x + ssm_lib.ssm_forward(p.mixer, h, cfg)
+    elif spec.mixer == "attn_local":
+        x = x + attn_lib.attention(p.mixer, h, cfg, window=cfg.sliding_window)
+    else:
+        x = x + attn_lib.attention(p.mixer, h, cfg)
+    if p.ffn is not None:
+        h = rms_norm(x, p.norm2, cfg.norm_eps)
+        if spec.ffn == "moe":
+            x = x + mlp_lib.moe(p.ffn, h, cfg)
+        else:
+            x = x + mlp_lib.mlp(p.ffn, h, cfg)
+    return x
+
+
+# --------------------------------------------------------------------------
+# stacked periods
+# --------------------------------------------------------------------------
+def init_stack(key, cfg: ModelConfig) -> list[PyTree]:
+    """Per-position stacked params: list over period positions; each element
+    has leaves with leading axis R = num_layers / period."""
+    from .common import stack_layer_init
+
+    specs = build_period(cfg)
+    repeats = cfg.num_layers // len(specs)
+    out = []
+    for pos, spec in enumerate(specs):
+        kpos = jax.random.fold_in(key, pos)
+        out.append(stack_layer_init(
+            lambda kk, spec=spec: init_layer(kk, spec, cfg), repeats, kpos))
+    return out
+
+
+def forward_stack(stack: list[PyTree], x: jax.Array, cfg: ModelConfig,
+                  remat: bool = True) -> jax.Array:
+    specs = build_period(cfg)
+
+    def body(carry, period_params):
+        h = carry
+        for pos, spec in enumerate(specs):
+            h = apply_layer(spec, period_params[pos], h, cfg)
+        return h, None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, stack, unroll=cfg.scan_unroll)
+    return x
+
+
+def prefill_stack(stack: list[PyTree], x: jax.Array, cfg: ModelConfig,
+                  remat: bool = True) -> tuple[jax.Array, list[PyTree]]:
+    """Forward pass that also emits decode caches for every layer."""
+    specs = build_period(cfg)
+
+    def body(carry, period_params):
+        h = carry
+        caches = []
+        for pos, spec in enumerate(specs):
+            p = period_params[pos]
+            hn = rms_norm(h, p.norm1, cfg.norm_eps)
+            if spec.mixer == "ssm":
+                out, c = ssm_lib.ssm_forward_with_cache(p.mixer, hn, cfg)
+            else:
+                window = cfg.sliding_window if spec.mixer == "attn_local" else 0
+                out, c = attn_lib.prefill_attention(p.mixer, hn, cfg,
+                                                    window=window)
+            h = h + out
+            if p.ffn is not None:
+                hn = rms_norm(h, p.norm2, cfg.norm_eps)
+                if spec.ffn == "moe":
+                    h = h + mlp_lib.moe(p.ffn, hn, cfg)
+                else:
+                    h = h + mlp_lib.mlp(p.ffn, hn, cfg)
+            caches.append(c)
+        return h, caches
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, caches = jax.lax.scan(body, x, stack, unroll=cfg.scan_unroll)
+    return x, caches
+
+
+# --------------------------------------------------------------------------
+# decode with caches
+# --------------------------------------------------------------------------
+def init_caches(cfg: ModelConfig, batch: int, max_len: int) -> list[PyTree]:
+    """Per-position stacked caches (leading R axis), matching init_stack."""
+    specs = build_period(cfg)
+    repeats = cfg.num_layers // len(specs)
+    caches = []
+    for spec in specs:
+        if spec.mixer == "ssm":
+            c = ssm_lib.init_ssm_cache(cfg, batch)
+        else:
+            length = (min(cfg.sliding_window, max_len)
+                      if spec.mixer == "attn_local" else max_len)
+            c = attn_lib.init_cache(cfg, batch, length)
+        caches.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (repeats,) + a.shape), c))
+    return caches
+
+
+def pad_caches(caches: list[PyTree], cfg: ModelConfig,
+               new_len: int) -> list[PyTree]:
+    """Grow global KV caches (axis: length) to ``new_len`` so decode can
+    append. Ring (sliding-window) and SSM caches are length-invariant."""
+    specs = build_period(cfg)
+    out = []
+    for spec, c in zip(specs, caches):
+        if spec.mixer == "attn" and isinstance(c, attn_lib.KVCache):
+            cur = c.k.shape[2]  # (R, B, L, KV, hd)
+            if cur < new_len:
+                widths = [(0, 0), (0, 0), (0, new_len - cur), (0, 0), (0, 0)]
+                c = attn_lib.KVCache(k=jnp.pad(c.k, widths),
+                                     v=jnp.pad(c.v, widths))
+        out.append(c)
+    return out
+
+
+def decode_stack(stack: list[PyTree], caches: list[PyTree], x: jax.Array,
+                 index: jax.Array, cfg: ModelConfig
+                 ) -> tuple[jax.Array, list[PyTree]]:
+    """One-token step through the whole depth; returns (x, new caches)."""
+    specs = build_period(cfg)
+
+    def body(carry, scanned):
+        h = carry
+        period_params, period_caches = scanned
+        new_caches = []
+        for pos, spec in enumerate(specs):
+            p = period_params[pos]
+            c = period_caches[pos]
+            hn = rms_norm(h, p.norm1, cfg.norm_eps)
+            if spec.mixer == "ssm":
+                out, c = ssm_lib.ssm_decode_step(p.mixer, hn, c, cfg)
+            else:
+                window = cfg.sliding_window if spec.mixer == "attn_local" else 0
+                out, c = attn_lib.decode_attention(p.mixer, hn, c, index, cfg,
+                                                   window=window)
+            h = h + out
+            if p.ffn is not None:
+                hn = rms_norm(h, p.norm2, cfg.norm_eps)
+                if spec.ffn == "moe":
+                    h = h + mlp_lib.moe(p.ffn, hn, cfg)
+                else:
+                    h = h + mlp_lib.mlp(p.ffn, hn, cfg)
+            new_caches.append(c)
+        return h, new_caches
+
+    x, new_caches = jax.lax.scan(body, x, (stack, caches),
+                                 unroll=cfg.scan_unroll)
+    return x, new_caches

@@ -1,0 +1,161 @@
+"""Shared model substrate: config, params-as-pytrees, norms, RoPE, embeddings.
+
+Models are pure pytrees + functions (no framework): ``init(key) -> params``
+builds (or abstractly describes, via ``jax.eval_shape``) the parameters;
+forward functions are pure. Layers stack along a leading axis and run under
+``jax.lax.scan`` so compile time is O(1) in depth — a hard requirement for
+lowering grok/arctic at 512 devices on a CPU host.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import shard_activation
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | hybrid | ssm | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 => d_model // num_heads
+    # attention
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    sliding_window: int = 0          # 0 = full attention
+    local_global_period: int = 0     # gemma3: period length; last layer global
+    attn_chunk: int = 0              # >0: flash-style tiled attention
+    # moe
+    num_experts: int = 0
+    experts_per_tok: int = 0
+    moe_d_ff: int = 0                # expert hidden dim (defaults to d_ff)
+    moe_every: int = 1               # MoE on layers where (i % moe_every)==moe_offset
+    moe_offset: int = 0
+    dense_residual: bool = False     # arctic: dense FFN in parallel with MoE
+    moe_group_size: int = 4096
+    capacity_factor: float = 1.25
+    # ssm / hybrid
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    attn_period: int = 0             # jamba: 1 attention layer per this many
+    attn_offset: int = 0             # position of the attention layer in period
+    # encoder-decoder
+    encoder_layers: int = 0
+    # frontends (stubbed modalities)
+    frontend: str = "none"           # none | patches | frames
+    frontend_tokens: int = 0         # prefix positions fed by the stub frontend
+    # misc
+    norm_eps: float = 1e-5
+    act: str = "swiglu"              # swiglu | gelu
+    tie_embeddings: bool = False
+    param_dtype: Any = jnp.bfloat16
+    fsdp_params: bool = False        # giant models: extra data-axis sharding
+    # Dry-run/roofline mode: fully unroll the layer scan so XLA's
+    # HloCostAnalysis (which visits while-loop bodies once) reports true
+    # per-step FLOPs/bytes. Training keeps the scan (compile-time O(1)).
+    scan_unroll: bool = False
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    def is_moe_layer(self, i: int) -> bool:
+        return (self.num_experts > 0
+                and i % self.moe_every == self.moe_offset % self.moe_every)
+
+    def is_attn_layer(self, i: int) -> bool:
+        """hybrid: which layers use attention (vs Mamba); dense: all."""
+        if self.family == "ssm":
+            return False
+        if self.attn_period:
+            return i % self.attn_period == self.attn_offset
+        return True
+
+    def is_global_attn_layer(self, i: int) -> bool:
+        """gemma3-style local:global interleave; others: all global unless
+        sliding_window set without a period (then all local)."""
+        if not self.local_global_period:
+            return self.sliding_window == 0
+        return (i + 1) % self.local_global_period == 0
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0] if len(shape) > 1 else 1
+    scale = scale if scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def stack_layer_init(per_layer_init, num_layers: int, key):
+    """Initialize L layers as stacked leaves: leaf shape (L, ...)."""
+    keys = jax.random.split(key, num_layers)
+    return jax.vmap(per_layer_init)(keys)
+
+
+# --------------------------------------------------------------------------
+# primitives
+# --------------------------------------------------------------------------
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * scale).astype(dt) * gamma
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, half)
+    cos = jnp.cos(ang)[..., :, None, :]  # (..., seq, 1, half)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def embed_tokens(embedding: jax.Array, tokens: jax.Array) -> jax.Array:
+    out = jnp.take(embedding, tokens, axis=0)
+    return shard_activation(out, "batch", "seq", None)
+
+
+def lm_logits(x: jax.Array, embedding: jax.Array,
+              head: Optional[jax.Array]) -> jax.Array:
+    """Final projection; f32 logits, vocab-sharded."""
+    w = embedding.T if head is None else head
+    logits = jnp.einsum("bsd,dv->bsv", x.astype(jnp.float32),
+                        w.astype(jnp.float32))
+    return shard_activation(logits, "batch", None, "vocab")
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token cross-entropy in f32; mask selects contributing positions."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return -jnp.mean(ll)
+    mask = mask.astype(jnp.float32)
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,212 @@
+"""Encoder-decoder assembly (seamless-m4t backbone).
+
+Encoder: bidirectional attention over stub frame embeddings (the audio
+frontend provides (B, T, d) directly per the assignment spec). Decoder:
+causal self-attention + cross-attention + MLP, layer-stacked via scan.
+
+Params:
+  {"embed": (V, d), "enc_stack": stacked enc layers, "dec_stack": stacked
+   dec layers, "enc_norm": (d,), "final_norm": (d,), "frontend_proj": (d, d)}
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard_activation
+
+from . import attention as attn_lib
+from . import mlp as mlp_lib
+from .common import ModelConfig, cross_entropy, dense_init, embed_tokens, lm_logits, rms_norm
+
+PyTree = Any
+
+
+def _logical_leaf(v):
+    return (isinstance(v, tuple) and not hasattr(v, "_fields")
+            and all(x is None or isinstance(x, str) for x in v))
+
+
+class EncLayer(NamedTuple):
+    norm1: jax.Array
+    attn: attn_lib.AttnParams
+    norm2: jax.Array
+    ffn: mlp_lib.MLPParams
+
+
+class DecLayer(NamedTuple):
+    norm1: jax.Array
+    self_attn: attn_lib.AttnParams
+    norm_x: jax.Array
+    cross_attn: attn_lib.AttnParams
+    norm2: jax.Array
+    ffn: mlp_lib.MLPParams
+
+
+def _init_enc_layer(key, cfg) -> EncLayer:
+    k1, k2 = jax.random.split(key)
+    g = jnp.ones((cfg.d_model,), cfg.param_dtype)
+    return EncLayer(norm1=g, attn=attn_lib.init_attn(k1, cfg), norm2=g,
+                    ffn=mlp_lib.init_mlp(k2, cfg))
+
+
+def _init_dec_layer(key, cfg) -> DecLayer:
+    k1, k2, k3 = jax.random.split(key, 3)
+    g = jnp.ones((cfg.d_model,), cfg.param_dtype)
+    return DecLayer(norm1=g, self_attn=attn_lib.init_attn(k1, cfg), norm_x=g,
+                    cross_attn=attn_lib.init_attn(k2, cfg), norm2=g,
+                    ffn=mlp_lib.init_mlp(k3, cfg))
+
+
+def init_params(key, cfg: ModelConfig) -> PyTree:
+    from .common import stack_layer_init
+
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    enc_layers = cfg.encoder_layers or cfg.num_layers
+    return {
+        "embed": dense_init(k1, (cfg.vocab_size, cfg.d_model), cfg.param_dtype,
+                            scale=0.02),
+        "frontend_proj": dense_init(k4, (cfg.d_model, cfg.d_model),
+                                    cfg.param_dtype),
+        "enc_stack": stack_layer_init(lambda kk: _init_enc_layer(kk, cfg),
+                                      enc_layers, k2),
+        "dec_stack": stack_layer_init(lambda kk: _init_dec_layer(kk, cfg),
+                                      cfg.num_layers, k3),
+        "enc_norm": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "final_norm": jnp.ones((cfg.d_model,), cfg.param_dtype),
+    }
+
+
+def param_logical(cfg: ModelConfig) -> PyTree:
+    a = attn_lib.attn_param_logical(cfg)
+    m = mlp_lib.mlp_param_logical()
+    stackify = lambda tree: jax.tree.map(
+        lambda names: (None,) + tuple(names), tree,
+        is_leaf=_logical_leaf)
+    enc = stackify(EncLayer(norm1=(None,), attn=a, norm2=(None,), ffn=m))
+    dec = stackify(DecLayer(norm1=(None,), self_attn=a, norm_x=(None,),
+                            cross_attn=a, norm2=(None,), ffn=m))
+    return {"embed": ("vocab", None), "frontend_proj": (None, None),
+            "enc_stack": enc, "dec_stack": dec,
+            "enc_norm": (None,), "final_norm": (None,)}
+
+
+def _encode(params, frames, cfg: ModelConfig) -> jax.Array:
+    x = jnp.einsum("btd,de->bte", frames.astype(cfg.param_dtype),
+                   params["frontend_proj"])
+    x = shard_activation(x, "batch", None, None)
+
+    def body(h, p: EncLayer):
+        hn = rms_norm(h, p.norm1, cfg.norm_eps)
+        h = h + _bidir_attention(p.attn, hn, cfg)
+        hn = rms_norm(h, p.norm2, cfg.norm_eps)
+        h = h + mlp_lib.mlp(p.ffn, hn, cfg)
+        return h, None
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["enc_stack"], unroll=cfg.scan_unroll)
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _bidir_attention(p, x, cfg):
+    """Encoder self-attention: full (non-causal) mask."""
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = attn_lib._project_qkv(p, x, positions, cfg)
+    scores = attn_lib._gqa_scores(q, k, cfg)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return attn_lib._gqa_out(probs, v, p.wo)
+
+
+def _decode_stack(params, x, memory, cfg: ModelConfig):
+    def body(h, p: DecLayer):
+        hn = rms_norm(h, p.norm1, cfg.norm_eps)
+        h = h + attn_lib.attention(p.self_attn, hn, cfg)
+        hn = rms_norm(h, p.norm_x, cfg.norm_eps)
+        mk, mv = attn_lib.project_memory_kv(p.cross_attn, memory)
+        h = h + attn_lib.cross_attention(p.cross_attn, hn, mk, mv, cfg)
+        hn = rms_norm(h, p.norm2, cfg.norm_eps)
+        h = h + mlp_lib.mlp(p.ffn, hn, cfg)
+        return h, None
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["dec_stack"], unroll=cfg.scan_unroll)
+    return x
+
+
+def train_loss(params, batch, cfg: ModelConfig) -> jax.Array:
+    memory = _encode(params, batch["frames"], cfg)
+    x = embed_tokens(params["embed"], batch["tokens"])
+    x = _decode_stack(params, x, memory, cfg)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(x, params["embed"], None)
+    return cross_entropy(logits, batch["labels"])
+
+
+def prefill(params, batch, cfg: ModelConfig):
+    """Encode + decoder prefill. Caches: (self KV per layer, memory KV per
+    layer, encoder memory) — decode_step reuses all three."""
+    memory = _encode(params, batch["frames"], cfg)
+    x = embed_tokens(params["embed"], batch["tokens"])
+
+    def body(h, p: DecLayer):
+        hn = rms_norm(h, p.norm1, cfg.norm_eps)
+        out, kv = attn_lib.prefill_attention(p.self_attn, hn, cfg)
+        h = h + out
+        hn = rms_norm(h, p.norm_x, cfg.norm_eps)
+        mk, mv = attn_lib.project_memory_kv(p.cross_attn, memory)
+        h = h + attn_lib.cross_attention(p.cross_attn, hn, mk, mv, cfg)
+        hn = rms_norm(h, p.norm2, cfg.norm_eps)
+        h = h + mlp_lib.mlp(p.ffn, hn, cfg)
+        return h, (kv, (mk.astype(jnp.bfloat16), mv.astype(jnp.bfloat16)))
+
+    x, caches = jax.lax.scan(body, x, params["dec_stack"],
+                             unroll=cfg.scan_unroll)
+    x = rms_norm(x[:, -1:, :], params["final_norm"], cfg.norm_eps)
+    return lm_logits(x, params["embed"], None), caches
+
+
+def decode_step(params, caches, tokens, index, cfg: ModelConfig):
+    x = embed_tokens(params["embed"], tokens)
+    self_kv, mem_kv = caches
+
+    def body(h, scanned):
+        p, kv, mem = scanned
+        hn = rms_norm(h, p.norm1, cfg.norm_eps)
+        out, kv = attn_lib.decode_attention(p.self_attn, hn, kv, index, cfg)
+        h = h + out
+        hn = rms_norm(h, p.norm_x, cfg.norm_eps)
+        h = h + attn_lib.cross_attention(p.cross_attn, hn, mem[0], mem[1], cfg)
+        hn = rms_norm(h, p.norm2, cfg.norm_eps)
+        h = h + mlp_lib.mlp(p.ffn, hn, cfg)
+        return h, kv
+
+    x, self_kv = jax.lax.scan(body, x, (params["dec_stack"], self_kv, mem_kv),
+                              unroll=cfg.scan_unroll)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return lm_logits(x, params["embed"], None), (self_kv, mem_kv)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, mem_len: int):
+    enc_l = cfg.num_layers
+    hd = cfg.resolved_head_dim
+    kv = attn_lib.KVCache(
+        k=jnp.zeros((enc_l, batch, max_len, cfg.num_kv_heads, hd), jnp.bfloat16),
+        v=jnp.zeros((enc_l, batch, max_len, cfg.num_kv_heads, hd), jnp.bfloat16))
+    mem = (jnp.zeros((enc_l, batch, mem_len, cfg.num_kv_heads, hd), jnp.bfloat16),
+           jnp.zeros((enc_l, batch, mem_len, cfg.num_kv_heads, hd), jnp.bfloat16))
+    return (kv, mem)
+
+
+def sample_batch(cfg: ModelConfig, batch: int, seq: int, key,
+                 with_labels: bool = True) -> dict:
+    kt, kl, kf = jax.random.split(key, 3)
+    out = {
+        "tokens": jax.random.randint(kt, (batch, seq), 0, cfg.vocab_size),
+        "frames": jax.random.normal(kf, (batch, seq, cfg.d_model), jnp.bfloat16),
+    }
+    if with_labels:
+        out["labels"] = jax.random.randint(kl, (batch, seq), 0, cfg.vocab_size)
+    return out

@@ -1,0 +1,133 @@
+"""Decoder-only language model assembly (covers dense / MoE / hybrid / SSM /
+VLM-backbone / frontend-stub families).
+
+Params pytree:
+  {"embed": (V, d), "stack": [per-position stacked LayerParams],
+   "final_norm": (d,), "frontend_proj": optional (d_front, d)}
+
+Batch dict (see ``repro.configs`` input_specs):
+  tokens  (B, S) int32
+  labels  (B, S) int32          (train only)
+  prefix_embeds (B, F, d) bf16  (vlm/audio stubs only)
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard_activation
+
+from . import blocks
+from .common import ModelConfig, cross_entropy, dense_init, embed_tokens, lm_logits, rms_norm
+
+PyTree = Any
+
+
+def _logical_leaf(v):
+    return (isinstance(v, tuple) and not hasattr(v, "_fields")
+            and all(x is None or isinstance(x, str) for x in v))
+
+
+def init_params(key, cfg: ModelConfig) -> PyTree:
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {
+        "embed": dense_init(k1, (cfg.vocab_size, cfg.d_model), cfg.param_dtype,
+                            scale=0.02),
+        "stack": blocks.init_stack(k2, cfg),
+        "final_norm": jnp.ones((cfg.d_model,), cfg.param_dtype),
+    }
+    if cfg.frontend != "none":
+        params["frontend_proj"] = dense_init(k3, (cfg.d_model, cfg.d_model),
+                                             cfg.param_dtype)
+    return params
+
+
+def param_logical(cfg: ModelConfig) -> PyTree:
+    """Logical axis names, mirroring init_params structure. Stacked layer
+    leaves get a leading None (the repeat axis)."""
+    specs = blocks.build_period(cfg)
+    stack_logical = []
+    for spec in specs:
+        lg = blocks.layer_param_logical(spec, cfg)
+        lg = jax.tree.map(lambda names: (None,) + tuple(names), lg,
+                          is_leaf=_logical_leaf)
+        stack_logical.append(lg)
+    out = {
+        "embed": ("vocab", None),
+        "stack": stack_logical,
+        "final_norm": (None,),
+    }
+    if cfg.frontend != "none":
+        out["frontend_proj"] = (None, None)
+    return out
+
+
+def _embed_inputs(params, batch, cfg: ModelConfig):
+    x = embed_tokens(params["embed"], batch["tokens"])
+    mask = None
+    if cfg.frontend != "none":
+        prefix = batch["prefix_embeds"].astype(cfg.param_dtype)
+        prefix = jnp.einsum("bfd,de->bfe", prefix, params["frontend_proj"])
+        x = jnp.concatenate([prefix, x], axis=1)
+        # loss only on token positions
+        b, s = batch["tokens"].shape
+        f = prefix.shape[1]
+        mask = jnp.concatenate([jnp.zeros((b, f), bool), jnp.ones((b, s), bool)],
+                               axis=1)
+    return shard_activation(x, "batch", "seq", None), mask
+
+
+def forward(params, batch, cfg: ModelConfig, remat: bool = True) -> jax.Array:
+    """Token-level logits (B, S_total, V)."""
+    x, _ = _embed_inputs(params, batch, cfg)
+    x = blocks.forward_stack(params["stack"], x, cfg, remat=remat)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return lm_logits(x, params["embed"], None)
+
+
+def train_loss(params, batch, cfg: ModelConfig) -> jax.Array:
+    x, mask = _embed_inputs(params, batch, cfg)
+    x = blocks.forward_stack(params["stack"], x, cfg, remat=True)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if mask is not None:
+        f = x.shape[1] - batch["labels"].shape[1]
+        x = x[:, f:, :]
+    logits = lm_logits(x, params["embed"], None)
+    return cross_entropy(logits, batch["labels"])
+
+
+def prefill(params, batch, cfg: ModelConfig):
+    """Prefill: returns (last-position logits, decode caches)."""
+    x, _ = _embed_inputs(params, batch, cfg)
+    x, caches = blocks.prefill_stack(params["stack"], x, cfg)
+    x = rms_norm(x[:, -1:, :], params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(x, params["embed"], None)
+    return logits, caches
+
+
+def decode_step(params, caches, tokens, index, cfg: ModelConfig):
+    """One decode step: tokens (B, 1), index = current absolute position."""
+    x = embed_tokens(params["embed"], tokens)
+    x, caches = blocks.decode_stack(params["stack"], caches, x, index, cfg)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(x, params["embed"], None)
+    return logits, caches
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int):
+    return blocks.init_caches(cfg, batch, max_len)
+
+
+def sample_batch(cfg: ModelConfig, batch: int, seq: int, key,
+                 with_labels: bool = True) -> dict:
+    """Concrete random batch for smoke tests / examples."""
+    kt, kl, kp = jax.random.split(key, 3)
+    out = {"tokens": jax.random.randint(kt, (batch, seq), 0, cfg.vocab_size)}
+    if with_labels:
+        out["labels"] = jax.random.randint(kl, (batch, seq), 0, cfg.vocab_size)
+    if cfg.frontend != "none":
+        out["prefix_embeds"] = jax.random.normal(
+            kp, (batch, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16)
+    return out

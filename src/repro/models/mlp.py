@@ -1,0 +1,135 @@
+"""Feed-forward layers: SwiGLU/GeLU MLP and capacity-based top-k MoE.
+
+MoE uses the grouped one-hot dispatch formulation (T5X/Mixtral-style): tokens
+are processed in groups of ``moe_group_size``; within a group, top-k routing
+builds a (tokens, experts, capacity) dispatch tensor and two einsums move
+tokens to experts and back. Dispatch overhead per token scales with group
+size — the per-arch ``moe_group_size`` keeps it <15% of expert FLOPs (see
+DESIGN.md). Experts shard over the "experts" logical axis when divisible
+(arctic: 128/16), else the expert FFN dim takes tensor parallelism (grok:
+8 experts, d_ff 32768/16) — resolved automatically by repro.dist.sharding.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard_activation
+
+from .common import ModelConfig, dense_init
+
+
+class MLPParams(NamedTuple):
+    w_in: jax.Array    # (d, ff) gate/up fused for swiglu: (d, 2*ff)
+    w_out: jax.Array   # (ff, d)
+
+
+class MoEParams(NamedTuple):
+    router: jax.Array          # (d, E)
+    w_in: jax.Array            # (E, d, 2*ff or ff)
+    w_out: jax.Array           # (E, ff, d)
+    dense: Optional[MLPParams]  # arctic's parallel dense residual
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> MLPParams:
+    d_ff = d_ff or cfg.d_ff
+    k1, k2 = jax.random.split(key)
+    width = 2 * d_ff if cfg.act == "swiglu" else d_ff
+    return MLPParams(
+        w_in=dense_init(k1, (cfg.d_model, width), cfg.param_dtype),
+        w_out=dense_init(k2, (d_ff, cfg.d_model), cfg.param_dtype),
+    )
+
+
+def mlp_param_logical() -> MLPParams:
+    return MLPParams(w_in=(None, "ff"), w_out=("ff", None))
+
+
+def init_moe(key, cfg: ModelConfig) -> MoEParams:
+    e = cfg.num_experts
+    ff = cfg.moe_d_ff or cfg.d_ff
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    width = 2 * ff if cfg.act == "swiglu" else ff
+    return MoEParams(
+        router=dense_init(k1, (cfg.d_model, e), jnp.float32),
+        w_in=dense_init(k2, (e, cfg.d_model, width), cfg.param_dtype),
+        w_out=dense_init(k3, (e, ff, cfg.d_model), cfg.param_dtype),
+        dense=init_mlp(k4, cfg) if cfg.dense_residual else None,
+    )
+
+
+def moe_param_logical(cfg: ModelConfig) -> MoEParams:
+    return MoEParams(
+        router=(None, None),
+        w_in=("experts", None, "expert_ff"),
+        w_out=("experts", "expert_ff", None),
+        dense=mlp_param_logical() if cfg.dense_residual else None,
+    )
+
+
+def _act(h: jax.Array, act: str, d_ff: int) -> jax.Array:
+    if act == "swiglu":
+        gate, up = h[..., :d_ff], h[..., d_ff:]
+        return jax.nn.silu(gate) * up
+    return jax.nn.gelu(h)
+
+
+def mlp(p: MLPParams, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    d_ff = p.w_out.shape[0]
+    h = jnp.einsum("bsd,df->bsf", x, p.w_in)
+    h = shard_activation(h, "batch", None, "ff")
+    h = _act(h, cfg.act, d_ff)
+    out = jnp.einsum("bsf,fd->bsd", h, p.w_out)
+    return shard_activation(out, "batch", "seq", None)
+
+
+def moe(p: MoEParams, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Top-k MoE over x (B, S, d)."""
+    b, s, d = x.shape
+    e = cfg.num_experts
+    topk = cfg.experts_per_tok
+    ff = cfg.moe_d_ff or cfg.d_ff
+    t = b * s
+    g = max(1, min(cfg.moe_group_size, t))
+    while t % g:  # largest divisor of T <= moe_group_size (trace-time loop)
+        g -= 1
+    ng = t // g
+    xg = x.reshape(ng, g, d)
+
+    logits = jnp.einsum("ngd,de->nge", xg.astype(jnp.float32), p.router)
+    weights, experts = jax.lax.top_k(logits, topk)          # (ng, g, topk)
+    weights = jax.nn.softmax(weights, axis=-1)
+
+    cap = int(g * topk / e * cfg.capacity_factor)
+    cap = max(cap, topk)
+    onehot = jax.nn.one_hot(experts, e, dtype=jnp.float32)  # (ng, g, topk, e)
+    # position of each (token, choice) in its expert's buffer
+    pos = jnp.cumsum(onehot.reshape(ng, g * topk, e), axis=1).reshape(
+        ng, g, topk, e) * onehot - 1.0
+    keep = (pos < cap) & (onehot > 0)
+    pos = jnp.where(keep, pos, 0.0).astype(jnp.int32)
+    # (ng, g, topk, e, cap): 1 where (token, choice) lands in (expert, slot);
+    # already masked by keep (capacity overflow drops the token's choice).
+    poshot = jax.nn.one_hot(pos, cap, dtype=jnp.float32) * keep[..., None]
+    dispatch = jnp.sum(poshot, axis=2)                       # (ng, g, e, cap)
+    combine = jnp.sum(weights[..., None, None] * poshot, axis=2)
+
+    # Group dim is batch-major: shard it over ("pod","data") so the
+    # dispatched tensors stay data-parallel. (Leaving it unsharded
+    # replicates xe/h/ye on every device — at grok-1 scale that costs
+    # ~23 TB/device/step of all-gathers; see EXPERIMENTS.md §Perf iter 1.)
+    xe = jnp.einsum("ngec,ngd->necd", dispatch, xg.astype(jnp.float32))
+    xe = shard_activation(xe.astype(x.dtype), "batch", "experts", None, None)
+    h = jnp.einsum("necd,edf->necf", xe, p.w_in)
+    h = shard_activation(h, "batch", "experts", None, "expert_ff")
+    h = _act(h, cfg.act, ff)
+    ye = jnp.einsum("necf,efd->necd", h, p.w_out)
+    ye = shard_activation(ye, "batch", "experts", None, None)
+    y = jnp.einsum("ngec,necd->ngd", combine, ye.astype(jnp.float32))
+    y = y.astype(x.dtype).reshape(b, s, d)
+    y = shard_activation(y, "batch", "seq", None)
+    if p.dense is not None:
+        y = y + mlp(p.dense, x, cfg)
+    return y

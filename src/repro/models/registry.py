@@ -1,0 +1,82 @@
+"""Model API: uniform facade over the decoder-only and encoder-decoder
+assemblies, used by the trainer, server, dry-run and smoke tests."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, lm
+from .common import ModelConfig
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ModelConfig
+    init_params: Callable[[jax.Array], PyTree]
+    param_logical: Callable[[], PyTree]
+    train_loss: Callable[[PyTree, dict], jax.Array]
+    prefill: Callable[[PyTree, dict], tuple]
+    decode_step: Callable[[PyTree, PyTree, jax.Array, jax.Array], tuple]
+    init_caches: Callable[..., PyTree]
+    sample_batch: Callable[..., dict]
+
+    def abstract_params(self, seed: int = 0) -> PyTree:
+        """ShapeDtypeStruct pytree of the parameters — no allocation."""
+        return jax.eval_shape(self.init_params, jax.random.key(seed))
+
+    def abstract_caches(self, batch: int, max_len: int) -> PyTree:
+        if self.cfg.family == "encdec":
+            return jax.eval_shape(
+                lambda: self.init_caches(self.cfg, batch, max_len, max_len))
+        return jax.eval_shape(lambda: self.init_caches(self.cfg, batch, max_len))
+
+    def param_count(self) -> int:
+        total = 0
+        for x in jax.tree.leaves(self.abstract_params()):
+            n = 1
+            for s in x.shape:  # python ints: no int32 overflow on 300B+ models
+                n *= int(s)
+            total += n
+        return total
+
+    def active_param_count(self) -> int:
+        """MoE: expert weights count as top-k / E of their size (active set)."""
+        cfg = self.cfg
+        if not cfg.num_experts:
+            return self.param_count()
+        total = 0
+        for leaf in jax.tree.leaves(self.abstract_params()):
+            n = 1
+            for s in leaf.shape:
+                n *= int(s)
+            # Expert tensors: (E, d, ff) or layer-stacked (R, E, d, ff).
+            if (leaf.ndim >= 3 and cfg.num_experts > 1
+                    and (leaf.shape[0] == cfg.num_experts
+                         or (leaf.ndim >= 4 and leaf.shape[1] == cfg.num_experts))):
+                n = n * cfg.experts_per_tok // cfg.num_experts
+            total += n
+        return total
+
+
+def build(cfg: ModelConfig) -> ModelApi:
+    if cfg.family == "encdec":
+        mod = encdec
+    else:
+        mod = lm
+    return ModelApi(
+        cfg=cfg,
+        init_params=lambda key: mod.init_params(key, cfg),
+        param_logical=lambda: mod.param_logical(cfg),
+        train_loss=lambda params, batch: mod.train_loss(params, batch, cfg),
+        prefill=lambda params, batch: mod.prefill(params, batch, cfg),
+        decode_step=lambda params, caches, tokens, index: mod.decode_step(
+            params, caches, tokens, index, cfg),
+        init_caches=mod.init_caches,
+        sample_batch=lambda batch, seq, key, **kw: mod.sample_batch(
+            cfg, batch, seq, key, **kw),
+    )

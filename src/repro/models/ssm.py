@@ -1,0 +1,217 @@
+"""Mamba2 (SSD — state-space duality) mixer: chunked dual-form training /
+prefill and O(1) recurrent decode.
+
+The chunked algorithm follows arXiv:2405.21060: within chunks of length Q the
+dual "attention-like" form runs as masked matmuls (MXU-friendly); across
+chunks a ``lax.scan`` carries the (H, P, N) SSM state. Decode is the pure
+recurrence. All state math in f32 (decays exp(a), a <= 0).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard_activation
+
+from .common import ModelConfig, dense_init
+
+
+class SSMParams(NamedTuple):
+    in_proj: jax.Array    # (d, 2*d_inner + 2*N + H)
+    conv_w: jax.Array     # (4, d_inner + 2*N) depthwise causal conv
+    dt_bias: jax.Array    # (H,)
+    a_log: jax.Array      # (H,)
+    d_skip: jax.Array     # (H,)
+    norm_g: jax.Array     # (d_inner,)
+    out_proj: jax.Array   # (d_inner, d)
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array       # (B, 3, d_inner + 2*N) last inputs
+    state: jax.Array      # (B, H, P, N) f32
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    heads = d_inner // cfg.ssm_head_dim
+    return d_inner, heads, cfg.ssm_state, cfg.ssm_head_dim
+
+
+def init_ssm(key, cfg: ModelConfig) -> SSMParams:
+    d_inner, heads, n, _ = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    conv_ch = d_inner + 2 * n
+    return SSMParams(
+        in_proj=dense_init(ks[0], (cfg.d_model, 2 * d_inner + 2 * n + heads),
+                           cfg.param_dtype),
+        conv_w=dense_init(ks[1], (4, conv_ch), cfg.param_dtype, scale=0.5),
+        dt_bias=jnp.zeros((heads,), jnp.float32),
+        a_log=jnp.zeros((heads,), jnp.float32),
+        d_skip=jnp.ones((heads,), jnp.float32),
+        norm_g=jnp.ones((d_inner,), cfg.param_dtype),
+        out_proj=dense_init(ks[3], (d_inner, cfg.d_model), cfg.param_dtype),
+    )
+
+
+def ssm_param_logical() -> SSMParams:
+    return SSMParams(in_proj=(None, "inner"), conv_w=(None, "inner"),
+                     dt_bias=(None,), a_log=(None,), d_skip=(None,),
+                     norm_g=("inner",), out_proj=("inner", None))
+
+
+def _split_proj(p: SSMParams, x: jax.Array, cfg: ModelConfig):
+    d_inner, heads, n, _ = _dims(cfg)
+    zxbcdt = jnp.einsum("bld,de->ble", x, p.in_proj)
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:2 * d_inner + 2 * n]
+    dt = zxbcdt[..., 2 * d_inner + 2 * n:].astype(jnp.float32)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv, kernel 4, over (B, L, C)."""
+    pad = jnp.pad(xbc, ((0, 0), (3, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i][None, None, :]
+              for i in range(4))
+    return jax.nn.silu(out)
+
+
+def _rmsnorm_gated(y: jax.Array, z: jax.Array, g: jax.Array, eps: float):
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    scale = jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + eps)
+    return (y * scale).astype(g.dtype) * g
+
+
+def ssm_forward(p: SSMParams, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    out, _ = ssm_forward_with_cache(p, x, cfg, want_cache=False)
+    return out
+
+
+def ssm_forward_with_cache(p: SSMParams, x: jax.Array, cfg: ModelConfig,
+                           want_cache: bool = True):
+    """Chunked SSD over x (B, L, d). Ragged tails are zero-padded to the
+    chunk size (zero inputs contribute nothing to the state; padded outputs
+    are sliced off)."""
+    d_inner, heads, n, hp = _dims(cfg)
+    b, l_orig, _ = x.shape
+    x_orig = x
+    q = min(cfg.ssm_chunk, l_orig)
+    pad = (-l_orig) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    l = l_orig + pad
+    nchunks = l // q
+
+    z, xbc, dt = _split_proj(p, x, cfg)
+    xbc = _causal_conv(xbc, p.conv_w)
+    xin = xbc[..., :d_inner]
+    bmat = xbc[..., d_inner:d_inner + n].astype(jnp.float32)      # (B,L,N)
+    cmat = xbc[..., d_inner + n:].astype(jnp.float32)             # (B,L,N)
+    dt = jax.nn.softplus(dt + p.dt_bias)                          # (B,L,H)
+    if pad:
+        # Padded steps must neither decay the state (a = dt*A -> 0) nor
+        # contribute to it (contribution is dt-scaled) — zero their dt.
+        live = (jnp.arange(l) < l_orig).astype(dt.dtype)
+        dt = dt * live[None, :, None]
+    a = -jnp.exp(p.a_log)                                         # (H,)
+    xh = xin.reshape(b, l, heads, hp).astype(jnp.float32)         # (B,L,H,P)
+    xh = shard_activation(xh, "batch", None, "inner", None)
+
+    # chunked layout
+    dtc = dt.reshape(b, nchunks, q, heads)
+    ac = dtc * a[None, None, None, :]                             # log-decay/step
+    cum = jnp.cumsum(ac, axis=2)                                  # (B,NC,Q,H)
+    total = cum[:, :, -1:, :]                                     # (B,NC,1,H)
+    bc = bmat.reshape(b, nchunks, q, n)
+    cc = cmat.reshape(b, nchunks, q, n)
+    xc = xh.reshape(b, nchunks, q, heads, hp)
+
+    # intra-chunk (dual/attention form)
+    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc)                # (B,NC,Q,Q)
+    ii = jnp.arange(q)[:, None]
+    jj = jnp.arange(q)[None, :]
+    causal = (jj <= ii)[None, None, :, :, None]                   # (1,1,Q,Q,1)
+    decay = jnp.exp(jnp.clip(cum[:, :, :, None, :] - cum[:, :, None, :, :],
+                             -60.0, 0.0))                         # (B,NC,Q,Q,H)
+    gate = jnp.where(causal, scores[..., None] * decay, 0.0)
+    gate = gate * dtc[:, :, None, :, :]                           # weight dt_j
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", gate, xc)
+
+    # inter-chunk state scan
+    in_decay = jnp.exp(jnp.clip(total - cum, -60.0, 0.0))         # (B,NC,Q,H)
+    state_in = jnp.einsum("bcjh,bcjn,bcjhp->bchpn",
+                          in_decay * dtc, bc, xc)                 # per-chunk contrib
+    chunk_decay = jnp.exp(jnp.clip(total[:, :, 0, :], -60.0, 0.0))  # (B,NC,H)
+
+    def scan_chunk(state, inputs):
+        contrib, cdecay = inputs  # (B,H,P,N), (B,H)
+        new_state = state * cdecay[:, :, None, None] + contrib
+        return new_state, state  # emit the state *entering* the chunk
+
+    state0 = jnp.zeros((b, heads, hp, n), jnp.float32)
+    final_state, states = jax.lax.scan(
+        scan_chunk, state0,
+        (jnp.moveaxis(state_in, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    states = jnp.moveaxis(states, 0, 1)                           # (B,NC,H,P,N)
+
+    out_decay = jnp.exp(jnp.clip(cum, -60.0, 0.0))                # (B,NC,Q,H)
+    y_inter = jnp.einsum("bcin,bchpn,bcih->bcihp", cc, states, out_decay)
+
+    y = (y_intra + y_inter).reshape(b, l, heads, hp)
+    y = y + p.d_skip[None, None, :, None] * xh
+    y = y.reshape(b, l, d_inner)[:, :l_orig]
+    y = _rmsnorm_gated(y, z[:, :l_orig], p.norm_g, cfg.norm_eps)
+    out = jnp.einsum("bld,de->ble", y.astype(p.out_proj.dtype), p.out_proj)
+    out = shard_activation(out, "batch", "seq", None)
+    cache = None
+    if want_cache:
+        # conv state: last 3 *pre-conv* projected inputs (of the real, unpadded
+        # sequence); ssm state: final carry. Note the carry includes padded
+        # positions' contributions, which are zero by construction.
+        _, xbc_raw, _ = _split_proj(p, x_orig[:, -3:, :], cfg)
+        cache = SSMCache(conv=xbc_raw.astype(p.conv_w.dtype), state=final_state)
+    return out, cache
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+def init_ssm_cache(cfg: ModelConfig, batch: int) -> SSMCache:
+    d_inner, heads, n, hp = _dims(cfg)
+    return SSMCache(
+        conv=jnp.zeros((batch, 3, d_inner + 2 * n), cfg.param_dtype),
+        state=jnp.zeros((batch, heads, hp, n), jnp.float32),
+    )
+
+
+def ssm_cache_logical() -> SSMCache:
+    return SSMCache(conv=("batch", None, "inner"),
+                    state=("batch", "inner", None, None))
+
+
+def ssm_decode_step(p: SSMParams, x: jax.Array, cache: SSMCache,
+                    cfg: ModelConfig) -> tuple[jax.Array, SSMCache]:
+    """One token: x (B, 1, d) -> (B, 1, d) with recurrent state update."""
+    d_inner, heads, n, hp = _dims(cfg)
+    b = x.shape[0]
+    z, xbc, dt = _split_proj(p, x, cfg)                           # seq len 1
+    hist = jnp.concatenate([cache.conv, xbc], axis=1)             # (B,4,C)
+    conv = sum(hist[:, i, :] * p.conv_w[i][None, :] for i in range(4))
+    conv = jax.nn.silu(conv)                                      # (B,C)
+    xin = conv[:, :d_inner]
+    bvec = conv[:, d_inner:d_inner + n].astype(jnp.float32)
+    cvec = conv[:, d_inner + n:].astype(jnp.float32)
+    dtv = jax.nn.softplus(dt[:, 0] + p.dt_bias)                   # (B,H)
+    a = -jnp.exp(p.a_log)
+    alpha = jnp.exp(dtv * a[None, :])                             # (B,H)
+    xhead = xin.reshape(b, heads, hp).astype(jnp.float32)
+    state = (cache.state * alpha[:, :, None, None]
+             + jnp.einsum("bh,bn,bhp->bhpn", dtv, bvec, xhead))
+    y = jnp.einsum("bn,bhpn->bhp", cvec, state)
+    y = y + p.d_skip[None, :, None] * xhead
+    y = y.reshape(b, 1, d_inner)
+    y = _rmsnorm_gated(y, z, p.norm_g, cfg.norm_eps)
+    out = jnp.einsum("bld,de->ble", y.astype(p.out_proj.dtype), p.out_proj)
+    return out, SSMCache(conv=hist[:, 1:, :], state=state)

@@ -1,0 +1,2 @@
+"""Serving substrate: KV-cache engine with continuous batching."""
+from .engine import Request, ServeEngine  # noqa: F401

@@ -1,0 +1,130 @@
+"""Continuous-batching serve engine.
+
+A fixed pool of ``max_batch`` slots over one shared, preallocated KV cache:
+
+* ``submit`` queues requests;
+* each ``step()`` admits queued requests into free slots (prefill computes
+  the prompt's cache row-block and writes it into the slot) and then runs
+  ONE decode step for all live slots (per-slot position indices);
+* finished requests (EOS or max_new) free their slots immediately — the
+  classic continuous-batching schedule.
+
+Single-host demo engine: it drives the same jitted prefill/decode_step the
+dry run lowers for the 512-chip mesh, at smoke scale on CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import blocks
+from repro.models.registry import ModelApi
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # (prompt_len,) int32
+    max_new: int = 16
+    eos_id: Optional[int] = None
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, api: ModelApi, max_batch: int = 4, max_len: int = 512):
+        if api.cfg.family == "encdec":
+            raise NotImplementedError("engine demo targets decoder-only archs")
+        self.api = api
+        self.cfg = api.cfg
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.params = None
+        self.caches = None
+        self.queue: deque[Request] = deque()
+        self.slots: list[Optional[Request]] = [None] * max_batch
+        self.lengths = np.zeros(max_batch, np.int32)
+        self._rid = itertools.count()
+        self._decode = jax.jit(api.decode_step)
+        self._prefill = jax.jit(api.prefill)
+
+    def load(self, params) -> None:
+        self.params = params
+        self.caches = self.api.init_caches(self.cfg, self.max_batch,
+                                           self.max_len)
+
+    def submit(self, prompt: np.ndarray, max_new: int = 16,
+               eos_id: Optional[int] = None) -> Request:
+        req = Request(rid=next(self._rid), prompt=np.asarray(prompt, np.int32),
+                      max_new=max_new, eos_id=eos_id)
+        self.queue.append(req)
+        return req
+
+    # ------------------------------------------------------------------
+    def _admit(self) -> None:
+        for slot in range(self.max_batch):
+            if self.slots[slot] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            batch = {"tokens": jnp.asarray(req.prompt[None, :])}
+            if self.cfg.frontend != "none":
+                batch["prefix_embeds"] = jnp.zeros(
+                    (1, self.cfg.frontend_tokens, self.cfg.d_model),
+                    jnp.bfloat16)
+            logits, row_caches = self._prefill(self.params, batch)
+            row_caches = blocks.pad_caches(row_caches, self.cfg, self.max_len)
+            self.caches = _write_slot(self.caches, row_caches, slot)
+            self.slots[slot] = req
+            off = (self.cfg.frontend_tokens
+                   if self.cfg.frontend != "none" else 0)
+            self.lengths[slot] = len(req.prompt) + off
+            first = int(jnp.argmax(logits[0, -1]))
+            req.out_tokens.append(first)
+
+    def step(self) -> int:
+        """Admit + one decode step for all live slots; returns #live."""
+        self._admit()
+        live = [i for i, r in enumerate(self.slots) if r is not None]
+        if not live:
+            return 0
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        for i in live:
+            tokens[i, 0] = self.slots[i].out_tokens[-1]
+        logits, self.caches = self._decode(
+            self.params, self.caches, jnp.asarray(tokens),
+            jnp.asarray(self.lengths))
+        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
+        for i in live:
+            req = self.slots[i]
+            self.lengths[i] += 1
+            req.out_tokens.append(int(nxt[i]))
+            if (len(req.out_tokens) >= req.max_new
+                    or (req.eos_id is not None and nxt[i] == req.eos_id)
+                    or self.lengths[i] >= self.max_len - 1):
+                req.done = True
+                self.slots[i] = None
+        return len(live)
+
+    def run(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if not self.queue and all(s is None for s in self.slots):
+                return
+            self.step()
+
+
+def _write_slot(caches, row_caches, slot: int):
+    """Copy a prefilled single-row cache into batch slot ``slot``."""
+
+    def write(dst, src):
+        if dst.ndim >= 3 and src.shape[0] == dst.shape[0]:
+            length = min(src.shape[2], dst.shape[2]) if dst.ndim >= 3 else 0
+            return dst.at[:, slot].set(src[:, 0].astype(dst.dtype))
+        return dst
+
+    return jax.tree.map(write, caches, row_caches)

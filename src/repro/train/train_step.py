@@ -1,0 +1,112 @@
+"""The jitted train step + sharding derivation.
+
+``train_shardings`` turns a model's logical parameter annotations into
+concrete NamedShardings for params, optimizer state and batch under the
+active mesh — including the FSDP extension for giant configs and the
+ZeRO-style moment sharding. ``make_train_step`` builds the jit-able
+(params, opt_state, batch) -> (params, opt_state, metrics) function with
+optional gradient-accumulation microbatching via ``lax.scan``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import MeshRules, _resolve, opt_state_sharding
+from repro.models.registry import ModelApi
+
+from .optimizer import AdamWConfig, adamw_update
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: AdamWConfig = AdamWConfig()
+    microbatches: int = 1
+
+
+def _is_logical(v) -> bool:
+    return (isinstance(v, tuple) and not hasattr(v, "_fields")
+            and all(x is None or isinstance(x, str) for x in v))
+
+
+def param_shardings(api: ModelApi, mr: MeshRules) -> PyTree:
+    """NamedShardings for every parameter from the model's logical names."""
+    logical = api.param_logical()
+    shapes = api.abstract_params()
+
+    def one(names, shape):
+        spec = _resolve(shape.shape, names, mr)
+        if api.cfg.fsdp_params:
+            # extend with data/pod axes on the largest replicated dim
+            return opt_state_sharding(spec, shape.shape, mr)
+        return NamedSharding(mr.mesh, spec)
+
+    return jax.tree.map(one, logical, shapes, is_leaf=_is_logical)
+
+
+def opt_shardings(api: ModelApi, mr: MeshRules, p_shardings: PyTree) -> PyTree:
+    shapes = api.abstract_params()
+
+    def one(sh, shape):
+        return opt_state_sharding(sh.spec, shape.shape, mr)
+
+    moments = jax.tree.map(one, p_shardings, shapes)
+    return {"m": moments, "v": moments,
+            "step": NamedSharding(mr.mesh, P())}
+
+
+def batch_shardings(batch_specs: dict, mr: MeshRules) -> dict:
+    out = {}
+    for k, v in batch_specs.items():
+        names = ("batch",) + (None,) * (len(v.shape) - 1)
+        out[k] = NamedSharding(mr.mesh, _resolve(v.shape, names, mr))
+    return out
+
+
+def train_shardings(api: ModelApi, mr: MeshRules, batch_specs: dict) -> dict:
+    ps = param_shardings(api, mr)
+    return {
+        "params": ps,
+        "opt_state": opt_shardings(api, mr, ps),
+        "batch": batch_shardings(batch_specs, mr),
+    }
+
+
+def make_train_step(api: ModelApi, tc: Optional[TrainConfig] = None):
+    tc = tc or TrainConfig()
+
+    def loss_fn(params, batch):
+        return api.train_loss(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if tc.microbatches > 1:
+            def micro(carry, mb):
+                gacc, lacc = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                gacc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                                    gacc, grads)
+                return (gacc, lacc + loss), None
+
+            mb_batch = jax.tree.map(
+                lambda x: x.reshape((tc.microbatches,
+                                     x.shape[0] // tc.microbatches) + x.shape[1:]),
+                batch)
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(micro, (zeros, 0.0), mb_batch)
+            inv = 1.0 / tc.microbatches
+            grads = jax.tree.map(lambda g: g * inv, gsum)
+            loss = lsum * inv
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state, metrics = adamw_update(params, grads, opt_state,
+                                                  tc.opt)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,13 @@
+import os
+
+# Keep the test suite on the host's real device topology (1 CPU device) —
+# the 512-device dry-run flag is set ONLY inside repro.launch.dryrun.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,30 @@
+"""Fleet durability sizing."""
+from repro.core.reliability import ReliabilityParams
+from repro.ftx.fleet import FleetSpec, evaluate, size_fleet
+
+
+def test_evaluate_and_rank():
+    spec = FleetSpec(nodes=512, state_bytes=1 << 40,
+                     target_mttdl_years=1.0,
+                     params=ReliabilityParams(detect_hours_single=0.0,
+                                              detect_hours_multi=0.0))
+    cands = size_fleet(spec, schemes=("azure", "cp-azure"),
+                       geometries=[(12, 2, 2), (24, 2, 2)], samples=150)
+    assert cands
+    # sorted cheapest-overhead first
+    assert all(a.overhead <= b.overhead
+               for a, b in zip(cands, cands[1:]))
+    # wider stripes are cheaper per byte
+    wide = [c for c in cands if c.k == 24]
+    narrow = [c for c in cands if c.k == 12]
+    assert wide and narrow
+    assert min(c.overhead for c in wide) < min(c.overhead for c in narrow)
+
+
+def test_fleet_scales_inverse_with_stripes():
+    spec1 = FleetSpec(nodes=64, state_bytes=1 << 34, target_mttdl_years=0.0)
+    spec2 = FleetSpec(nodes=64, state_bytes=1 << 36, target_mttdl_years=0.0)
+    a = evaluate(spec1, "cp-azure", 12, 2, 2, samples=150)
+    b = evaluate(spec2, "cp-azure", 12, 2, 2, samples=150)
+    assert b.stripes > a.stripes
+    assert b.fleet_mttdl_years < a.fleet_mttdl_years

@@ -1,0 +1,44 @@
+"""MTTDL model sanity + paper-model ordering."""
+import pytest
+
+from repro.core.reliability import ReliabilityParams, stripe_mttdl_years
+from repro.core.schemes import make_scheme
+
+PARAMS = ReliabilityParams()
+
+
+def test_positive_and_finite():
+    for name in ("azure", "cp-azure", "cp-uniform"):
+        v = stripe_mttdl_years(make_scheme(name, 6, 2, 2), PARAMS,
+                               samples=300)
+        assert v > 0
+
+
+def test_paper_model_cp_wins_at_p1():
+    az = stripe_mttdl_years(make_scheme("azure", 6, 2, 2), PARAMS,
+                            samples=500, model="paper")
+    cpa = stripe_mttdl_years(make_scheme("cp-azure", 6, 2, 2), PARAMS,
+                             samples=500, model="paper")
+    cpu = stripe_mttdl_years(make_scheme("cp-uniform", 6, 2, 2), PARAMS,
+                             samples=500, model="paper")
+    assert cpa > az and cpu > az
+
+
+def test_strict_model_penalizes_lower_distance():
+    """Under the rank-faithful model, CP's d=r+1 costs reliability vs
+    Azure's d=r+2 — the honest trade-off DESIGN.md documents."""
+    az = stripe_mttdl_years(make_scheme("azure", 6, 2, 2), PARAMS,
+                            samples=500, model="strict")
+    cpa = stripe_mttdl_years(make_scheme("cp-azure", 6, 2, 2), PARAMS,
+                             samples=500, model="strict")
+    assert az > cpa
+
+
+def test_faster_repair_higher_mttdl():
+    import dataclasses
+
+    s = make_scheme("cp-azure", 6, 2, 2)
+    slow = dataclasses.replace(PARAMS, bandwidth_gbps=0.1)
+    fast = dataclasses.replace(PARAMS, bandwidth_gbps=10.0)
+    assert (stripe_mttdl_years(s, fast, samples=300)
+            > stripe_mttdl_years(s, slow, samples=300))

@@ -1,0 +1,166 @@
+"""Repair algorithms vs the paper's worked examples and evaluation tables."""
+import numpy as np
+import pytest
+
+from repro.core import metrics as M
+from repro.core.repair import multi_repair_plan, single_repair_plan
+from repro.core.schemes import make_scheme
+
+
+def ids(s, *labels):
+    table = {s.label(b): b for b in range(s.n)}
+    return [table[x] for x in labels]
+
+
+# ---------------------------------------------------------------- §IV-C
+class TestCPAzureExamples:
+    """The paper's (6,2,2) CP-Azure worked examples."""
+
+    s = make_scheme("cp-azure", 6, 2, 2)
+
+    def test_single_data(self):
+        (d1,) = ids(self.s, "D1")
+        plan = single_repair_plan(self.s, d1)
+        assert plan.cost == 3 and plan.method == "group"
+
+    def test_single_g1_global(self):
+        (g1,) = ids(self.s, "G1")
+        plan = single_repair_plan(self.s, g1)
+        assert plan.cost == 6 and plan.method == "global"
+
+    def test_single_g2_cascade(self):
+        (g2,) = ids(self.s, "G2")
+        plan = single_repair_plan(self.s, g2)
+        assert plan.cost == 2 and plan.method == "cascade"
+        assert plan.reads == frozenset(ids(self.s, "L1", "L2"))
+
+    def test_single_local_cascade(self):
+        (l1,) = ids(self.s, "L1")
+        plan = single_repair_plan(self.s, l1)
+        assert plan.cost == 2 and plan.method == "cascade"
+
+    def test_multi_d1_g2(self):
+        """Paper: D1+G2 -> D2, D3, L1, L2 (4 blocks)."""
+        pat = ids(self.s, "D1", "G2")
+        plan = multi_repair_plan(self.s, pat)
+        assert plan.feasible and plan.all_local and plan.cost == 4
+        assert plan.reads == frozenset(ids(self.s, "D2", "D3", "L1", "L2"))
+
+    def test_multi_two_in_group_plus_parity(self):
+        """Paper: D1,D2,L2 -> 6 blocks (global, L2 reuses global reads)."""
+        pat = ids(self.s, "D1", "D2", "L2")
+        plan = multi_repair_plan(self.s, pat)
+        assert plan.feasible and not plan.all_local and plan.cost == 6
+
+    def test_multi_d1_g1(self):
+        """Paper: D1,G1 -> 6 blocks."""
+        pat = ids(self.s, "D1", "G1")
+        plan = multi_repair_plan(self.s, pat)
+        assert plan.feasible and plan.cost == 6
+
+    def test_wide_d1_l1_cascading(self):
+        """Paper (24,2,2): D1+L1 -> 13 nodes via cascade-then-group."""
+        s = make_scheme("cp-azure", 24, 2, 2)
+        pat = ids(s, "D1", "L1")
+        plan = multi_repair_plan(s, pat)
+        assert plan.feasible and plan.all_local and plan.cost == 13
+
+
+class TestCPUniformExamples:
+    """The paper's (6,2,2) CP-Uniform worked examples (groups (D1..D3),
+    (D4..D6, G1))."""
+
+    s = make_scheme("cp-uniform", 6, 2, 2)
+
+    def test_group_structure(self):
+        assert [len(g.items) for g in self.s.groups] == [3, 4]
+        (g1,) = ids(self.s, "G1")
+        assert g1 in self.s.groups[1].items
+
+    def test_single_costs(self):
+        d1, g1, g2, l1 = ids(self.s, "D1", "G1", "G2", "L1")
+        assert single_repair_plan(self.s, d1).cost == 3
+        assert single_repair_plan(self.s, g1).cost == 4
+        assert single_repair_plan(self.s, g2).cost == 2
+        assert single_repair_plan(self.s, l1).cost == 2
+
+    def test_multi_d1_g2(self):
+        """Paper: D1,G2 -> D2,D3,L1,L2 (4 blocks)."""
+        plan = multi_repair_plan(self.s, ids(self.s, "D1", "G2"))
+        assert plan.all_local and plan.cost == 4
+
+    def test_multi_overloaded_group(self):
+        """Paper: D1,D2,L2 -> 6 blocks."""
+        plan = multi_repair_plan(self.s, ids(self.s, "D1", "D2", "L2"))
+        assert plan.feasible and plan.cost == 6
+
+
+# ------------------------------------------------------------ table match
+PAPER_TABLE3 = {
+    # (scheme, k, r, p): (ADRC, ARC1)
+    ("azure", 6, 2, 2): (3.00, 3.60),
+    ("azure", 24, 2, 2): (12.00, 12.86),
+    ("azure+1", 6, 2, 2): (6.00, 4.80),
+    ("azure+1", 48, 4, 3): (24.00, 22.18),
+    ("optimal", 6, 2, 2): (5.00, 5.00),
+    ("uniform", 6, 2, 2): (4.00, 4.00),
+    ("uniform", 24, 2, 2): (13.00, 13.00),
+    ("cp-azure", 6, 2, 2): (3.00, 3.00),
+    ("cp-azure", 24, 2, 2): (12.00, 11.36),
+    ("cp-azure", 72, 4, 4): (18.00, 19.15),
+    ("cp-uniform", 6, 2, 2): (3.50, 3.10),
+    ("cp-uniform", 24, 2, 2): (12.50, 11.39),
+    ("cp-uniform", 48, 4, 3): (17.00, 15.98),
+    ("cp-uniform", 96, 5, 4): (25.00, 24.00),
+}
+
+
+@pytest.mark.parametrize("key,expect", sorted(PAPER_TABLE3.items()))
+def test_adrc_arc1_match_paper(key, expect):
+    name, k, r, p = key
+    s = make_scheme(name, k, r, p)
+    adrc, arc1 = expect
+    assert abs(M.adrc(s) - adrc) < 0.005
+    assert abs(M.arc1(s) - arc1) < 0.005
+
+
+PAPER_ARC2 = {("azure", 6, 2, 2): 6.00, ("azure", 24, 2, 2): 24.00,
+              ("cp-azure", 24, 2, 2): 21.82}
+
+
+@pytest.mark.parametrize("key,expect", sorted(PAPER_ARC2.items()))
+def test_arc2_match_paper(key, expect):
+    name, k, r, p = key
+    assert abs(M.arc2(make_scheme(name, k, r, p)) - expect) < 0.005
+
+
+PAPER_PORTIONS = {  # (scheme,k,r,p): (local, effective)
+    ("azure", 6, 2, 2): (0.36, 0.00),
+    ("azure", 24, 2, 2): (0.45, 0.00),
+    ("cp-azure", 6, 2, 2): (0.67, 0.47),
+    ("cp-azure", 24, 2, 2): (0.58, 0.20),
+    ("cp-uniform", 6, 2, 2): (0.80, 0.53),
+    ("cp-uniform", 24, 2, 2): (0.62, 0.21),
+    ("uniform", 6, 2, 2): (0.56, 0.00),
+}
+
+
+@pytest.mark.parametrize("key,expect", sorted(PAPER_PORTIONS.items()))
+def test_local_portions_match_paper(key, expect):
+    name, k, r, p = key
+    s = make_scheme(name, k, r, p)
+    lp, el = expect
+    assert abs(M.local_portion(s) - lp) < 0.005
+    assert abs(M.effective_local_portion(s) - el) < 0.005
+
+
+def test_multi_cost_never_exceeds_k():
+    """Paper: multi-node repair accesses at most k blocks."""
+    import itertools
+
+    for name in ("cp-azure", "cp-uniform", "azure", "uniform"):
+        s = make_scheme(name, 8, 2, 2)
+        for pat in itertools.combinations(range(s.n), 2):
+            plan = multi_repair_plan(s, pat)
+            if plan.feasible:
+                assert plan.cost <= s.k, (name, pat, plan)

@@ -1,0 +1,72 @@
+"""Dry-run artifact parsing + roofline term construction."""
+import json
+from pathlib import Path
+
+import pytest
+
+
+def test_collective_parser_synthetic():
+    from repro.launch.dryrun import collective_bytes
+
+    hlo = """
+  %ag = bf16[16,1024]{1,0} all-gather(bf16[1,1024]{1,0} %p0), replica_groups={}
+  %ar.1 = f32[256]{0} all-reduce(f32[256]{0} %x), to_apply=%add
+  ROOT %rs = f32[16]{0} reduce-scatter(f32[256]{0} %y), dimensions={0}
+  %cp = u8[128]{0} collective-permute(u8[128]{0} %z), source_target_pairs={{0,1}}
+  %a2a = bf16[8,64]{1,0} all-to-all(bf16[8,64]{1,0} %w), dimensions={0}
+  %dot = f32[4,4]{1,0} dot(f32[4,8] %a, f32[8,4] %b), metadata={op_name="bf16[999,999]"}
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == {"in": 2048, "out": 32768, "count": 1}
+    assert out["all-reduce"]["out"] == 1024 and out["all-reduce"]["count"] == 1
+    assert out["reduce-scatter"] == {"in": 1024, "out": 64, "count": 1}
+    assert out["collective-permute"]["out"] == 128
+    assert out["all-to-all"]["in"] == 1024
+    # the metadata shape literal on the dot line must NOT count
+    assert sum(v["out"] for v in out.values()) == 32768 + 1024 + 64 + 128 + 1024
+
+
+def test_wire_bytes_model():
+    from repro.launch.roofline import wire_bytes
+
+    coll = {"all-reduce": {"in": 100, "out": 100, "count": 1},
+            "all-gather": {"in": 10, "out": 160, "count": 1},
+            "reduce-scatter": {"in": 160, "out": 10, "count": 1},
+            "all-to-all": {"in": 80, "out": 80, "count": 1},
+            "collective-permute": {"in": 40, "out": 40, "count": 1}}
+    # 2*AR.in + AG.out + RS.in + A2A.in + CP.out
+    assert wire_bytes(coll) == 2 * 100 + 160 + 160 + 80 + 40
+
+
+@pytest.mark.skipif(
+    not (Path(__file__).parents[1] / "benchmarks/results/dryrun_single.json").exists(),
+    reason="dry-run results not generated yet")
+def test_dryrun_results_complete():
+    """All 40 cells accounted for, both meshes, no errors."""
+    base = Path(__file__).parents[1] / "benchmarks/results"
+    for mesh in ("single", "multi"):
+        d = json.loads((base / f"dryrun_{mesh}.json").read_text())
+        assert len(d) == 40, mesh
+        errs = [k for k, v in d.items() if "error" in v]
+        assert not errs, (mesh, errs)
+        skips = [k for k, v in d.items() if "skip" in v]
+        assert len(skips) == 7  # long_500k full-attention skips
+        for k, v in d.items():
+            if "skip" in v:
+                assert "long_500k" in k
+
+
+@pytest.mark.skipif(
+    not (Path(__file__).parents[1] / "benchmarks/results/dryrun_single_unrolled.json").exists(),
+    reason="unrolled dry-run not generated yet")
+def test_roofline_table_builds():
+    from repro.launch.roofline import build_table
+
+    rows = build_table()
+    assert len(rows) == 40
+    live = [r for r in rows if not r.get("skip")]
+    assert len(live) == 33
+    for r in live:
+        assert r["compute_s"] > 0 and r["memory_s"] > 0
+        assert r["dominant"] in ("compute", "memory", "collective")
+        assert 0 < r["useful"] < 2.0, (r["arch"], r["shape"], r["useful"])

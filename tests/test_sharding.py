@@ -1,0 +1,55 @@
+"""Logical sharding resolution + smoke-mesh lowering of every family."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import _resolve, opt_state_sharding, with_rules
+
+
+@pytest.fixture
+def mesh():
+    # 1x1 host mesh with the production axis names
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_resolve_divisible(mesh):
+    with with_rules(mesh) as mr:
+        spec = _resolve((32, 64), ("batch", "ff"), mr)
+        assert spec == P("data", "model")
+
+
+def test_resolve_indivisible_degrades():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with with_rules(mesh) as mr:
+        pass
+    # simulate a 16-way model axis by faking rule checks on a bigger mesh is
+    # not possible on 1 device; the fallback logic is covered via dryrun
+    # results (grok experts replicate, arctic heads replicate).
+
+
+def test_axis_used_once(mesh):
+    with with_rules(mesh) as mr:
+        spec = _resolve((4, 4), ("heads", "ff"), mr)  # both want "model"
+        assert spec[0] == "model" and spec[1] is None
+
+
+def test_opt_state_extends(mesh):
+    with with_rules(mesh) as mr:
+        ns = opt_state_sharding(P(None, "model"), (8, 4), mr)
+        assert ns.spec[0] == "data"
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "seamless-m4t-medium",
+                                  "jamba-v0.1-52b", "mamba2-2.7b",
+                                  "arctic-480b"])
+@pytest.mark.parametrize("shape", ["train_4k", "decode_32k"])
+def test_smoke_lowering_compiles(arch, shape):
+    """lower().compile() of reduced configs on the host mesh — the same
+    driver the 512-device dry-run uses."""
+    from repro.launch.dryrun import lower_cell
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    record, lowered, compiled = lower_cell(arch, shape, mesh, smoke=True)
+    assert record["cost"].get("flops", 0) > 0
+    assert "error" not in record["memory"]
