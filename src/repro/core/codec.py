@@ -8,6 +8,14 @@ The reconstruction rule is fully general: to rebuild block ``b`` from a
 read-set ``R`` we solve ``gen[R].T @ x = gen[b]`` over GF(2^8) and combine
 ``x @ stack(R-blocks)`` on device. This covers local-group repair, cascaded
 repair and global decode with one code path, and works for every scheme.
+
+Since the planner/executor split (DESIGN.md §4) every GF solve goes through
+a :class:`~repro.core.planner.RepairPlanner`, so repeated repairs of the
+same ``(scheme, pattern, policy)`` reuse the compiled coefficient matrix
+instead of re-running Gaussian elimination; multi-node cascades execute as a
+single flattened kernel launch. For many stripes sharing a failure pattern,
+prefer :class:`~repro.core.engine.BatchedCodecEngine`, which runs the whole
+batch in one launch.
 """
 from __future__ import annotations
 
@@ -18,10 +26,10 @@ from typing import Iterable, Mapping, Optional, Sequence
 import jax
 import numpy as np
 
-from repro.kernels.ops import encode_op, gf_matmul_op
+from repro.kernels.ops import encode_op, gf_matmul_op, matmul_backend, require_backend
 
-from .gf import gf_solve_any
-from .repair import MultiRepairPlan, RepairPlan, multi_repair_plan, single_repair_plan
+from .planner import RepairPlanner
+from .repair import MultiRepairPlan, RepairPlan
 from .schemes import LRCScheme
 
 
@@ -29,6 +37,12 @@ from .schemes import LRCScheme
 class StripeCodec:
     scheme: LRCScheme
     backend: str = "gf"  # see repro.kernels.ops.BACKENDS
+    planner: Optional[RepairPlanner] = None
+
+    def __post_init__(self):
+        require_backend(self.backend)
+        if self.planner is None:
+            self.planner = RepairPlanner(self.scheme)
 
     # ------------------------------------------------------------- encoding
     def encode(self, data: jax.Array | np.ndarray) -> jax.Array:
@@ -46,28 +60,23 @@ class StripeCodec:
                               free: Mapping[int, np.ndarray] | None = None
                               ) -> Optional[np.ndarray]:
         """GF coefficients x with block[target] = sum_i x_i * block[reads[i]]."""
-        gen = self.scheme.gen
-        a = gen[list(reads)].T.astype(np.uint8)  # (k, |R|)
-        return gf_solve_any(a, gen[target])
+        return self.planner.coeffs_for(target, tuple(reads))
 
     def combine(self, coeffs: np.ndarray, blocks: Sequence[jax.Array]) -> jax.Array:
         """x (|R|,) . blocks (|R|, B) -> (B,) on device via the GF kernel."""
         import jax.numpy as jnp
 
         stacked = jnp.stack([jnp.asarray(b, jnp.uint8) for b in blocks], axis=0)
-        backend = "ref" if self.backend not in ("gf", "ref") else self.backend
-        out = gf_matmul_op(coeffs.reshape(1, -1), stacked, backend=backend)
+        out = gf_matmul_op(coeffs.reshape(1, -1), stacked,
+                           backend=matmul_backend(self.backend))
         return out[0]
 
     def repair_single(self, failed: int, available: Mapping[int, jax.Array],
                       policy: str = "paper") -> tuple[jax.Array, RepairPlan]:
-        plan = single_repair_plan(self.scheme, failed, policy)
-        reads = sorted(plan.reads)
-        coeffs = self.reconstruction_coeffs(failed, reads)
-        if coeffs is None:
-            raise RuntimeError(f"inconsistent repair plan for block {failed}")
-        block = self.combine(coeffs, [available[b] for b in reads])
-        return block, plan
+        compiled = self.planner.single_plan(failed, policy)
+        block = self.combine(compiled.coeffs[0],
+                             [available[b] for b in compiled.reads])
+        return block, compiled.meta
 
     def repair_multi(self, failed: Iterable[int],
                      available: Mapping[int, jax.Array]
@@ -75,46 +84,29 @@ class StripeCodec:
         """Execute the min-read multi-node plan; returns rebuilt blocks.
 
         ``available`` must contain every surviving block the plan reads.
-        Repaired blocks become sources for later steps (the cascading
-        effect), matching the planner's free-reuse accounting.
+        The planner pre-flattens the cascade — every failed block is a linear
+        combination of the surviving read set — so the whole pattern repairs
+        in one kernel launch.
         """
-        plan = multi_repair_plan(self.scheme, failed)
-        if not plan.feasible:
-            raise RuntimeError(f"pattern {sorted(failed)} is not decodable")
-        have: dict[int, jax.Array] = dict(available)
-        rebuilt: dict[int, jax.Array] = {}
-        pending = [b for b, _ in plan.steps]
-        for b in pending:
-            # Sources: anything readable or already repaired. Use the plan's
-            # read set plus repaired blocks; solve for b against that basis.
-            basis = sorted(set(plan.reads) | set(rebuilt))
-            coeffs = self.reconstruction_coeffs(b, basis)
-            if coeffs is None:
-                raise RuntimeError(f"cannot reconstruct block {b} from {basis}")
-            nz = [i for i, c in enumerate(coeffs) if c]
-            use = [basis[i] for i in nz]
-            block = self.combine(coeffs[nz], [have[s] for s in use])
-            have[b] = block
-            rebuilt[b] = block
-        return rebuilt, plan
+        import jax.numpy as jnp
+
+        compiled = self.planner.multi_plan(failed)
+        stacked = jnp.stack([jnp.asarray(available[b], jnp.uint8)
+                             for b in compiled.reads], axis=0)
+        out = gf_matmul_op(compiled.coeffs, stacked,
+                           backend=matmul_backend(self.backend))
+        rebuilt = {b: out[i] for i, b in enumerate(compiled.targets)}
+        return rebuilt, compiled.meta
 
     def decode_all(self, available: Mapping[int, jax.Array]) -> jax.Array:
         """Rebuild the k data blocks from any rank-k subset of blocks."""
         import jax.numpy as jnp
 
-        ids = sorted(available)
-        gen = self.scheme.gen
-        a = gen[ids].T.astype(np.uint8)  # (k, |ids|)
-        rows = []
-        for tgt in range(self.scheme.k):
-            x = gf_solve_any(a, gen[tgt])
-            if x is None:
-                raise RuntimeError("available blocks do not span the data")
-            rows.append(x)
-        coeffs = np.stack(rows, axis=0)  # (k, |ids|)
-        stacked = jnp.stack([jnp.asarray(available[b], jnp.uint8) for b in ids])
-        return gf_matmul_op(coeffs, stacked, backend=self.backend
-                            if self.backend in ("gf", "ref") else "ref")
+        compiled = self.planner.decode_plan(available.keys())
+        stacked = jnp.stack([jnp.asarray(available[b], jnp.uint8)
+                             for b in compiled.reads])
+        return gf_matmul_op(compiled.coeffs, stacked,
+                            backend=matmul_backend(self.backend))
 
 
 @functools.lru_cache(maxsize=64)

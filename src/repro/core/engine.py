@@ -1,0 +1,131 @@
+"""Batched multi-stripe codec engine.
+
+The planner/executor split (DESIGN.md §4): :class:`~repro.core.planner.
+RepairPlanner` compiles and caches the host-side GF algebra; this module's
+:class:`BatchedCodecEngine` executes a compiled plan over a whole *batch* of
+stripes at once — ``(S, k, B)`` in, ``(S, n, B)`` out — as a single Pallas
+launch with a stripe grid axis, instead of the seed codec's one solve + one
+launch per stripe per block.
+
+Batches are homogeneous in the failure pattern, not in S: callers group
+stripes by pattern (``ftx.stripestore`` does this per fleet repair) and may
+pass ragged last batches of any size, including S=1.
+
+Availability can be given either as a dense ``(S, n, B)`` array or as a
+mapping ``block-id -> (S, B)`` holding only surviving blocks; both gather to
+the plan's read order before the launch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Mapping, Union
+
+import jax
+import numpy as np
+
+from repro.kernels.ops import encode_batch_op, gf_matmul_batch_op, matmul_backend, require_backend
+
+from .planner import CompiledPlan, RepairPlanner
+from .schemes import LRCScheme
+
+Blocks = Union[jax.Array, np.ndarray, Mapping[int, "jax.Array | np.ndarray"]]
+
+
+@dataclasses.dataclass
+class BatchedCodecEngine:
+    scheme: LRCScheme
+    backend: str = "gf"
+    planner: RepairPlanner | None = None
+
+    def __post_init__(self):
+        require_backend(self.backend)
+        if self.planner is None:
+            self.planner = RepairPlanner(self.scheme)
+        elif self.planner.scheme is not self.scheme:
+            raise ValueError("planner is bound to a different scheme")
+
+    # --------------------------------------------------------------- helpers
+    def _gather(self, available: Blocks, reads: tuple[int, ...]) -> jax.Array:
+        """Stack the read blocks into (S, |reads|, B) in plan column order."""
+        import jax.numpy as jnp
+
+        if isinstance(available, Mapping):
+            cols = []
+            for b in reads:
+                try:
+                    cols.append(jnp.asarray(available[b], jnp.uint8))
+                except KeyError:
+                    raise KeyError(f"plan reads block {b} but it was not "
+                                   f"provided") from None
+            return jnp.stack(cols, axis=1)
+        arr = jnp.asarray(available, jnp.uint8)
+        if arr.ndim != 3:
+            raise ValueError(f"expected (S, n, B) availability, got {arr.shape}")
+        return arr[:, list(reads), :]
+
+    def execute(self, plan: CompiledPlan, stacked: jax.Array | np.ndarray
+                ) -> jax.Array:
+        """Run a compiled plan on an already-gathered (S, |reads|, B) stack.
+
+        The zero-copy entry point for callers that materialize the read
+        stack themselves (the stripe store fills one preallocated buffer
+        straight from disk) — skips the per-block gather/stack.
+        """
+        import jax.numpy as jnp
+
+        stacked = jnp.asarray(stacked, jnp.uint8)
+        if stacked.ndim != 3 or stacked.shape[1] != len(plan.reads):
+            raise ValueError(f"expected (S, {len(plan.reads)}, B) stack for "
+                             f"plan reads {plan.reads}, got {stacked.shape}")
+        return gf_matmul_batch_op(plan.coeffs, stacked,
+                                  backend=matmul_backend(self.backend))
+
+    def _execute(self, plan: CompiledPlan, available: Blocks) -> jax.Array:
+        return self.execute(plan, self._gather(available, plan.reads))
+
+    # ------------------------------------------------------------- encoding
+    def encode(self, data: jax.Array | np.ndarray) -> jax.Array:
+        """(S, k, B) data -> (S, n, B) systematic stripes, one launch."""
+        import jax.numpy as jnp
+
+        data = jnp.asarray(data, jnp.uint8)
+        if data.ndim != 3 or data.shape[1] != self.scheme.k:
+            raise ValueError(
+                f"expected (S, {self.scheme.k}, B) data, got {data.shape}")
+        parity = encode_batch_op(self.planner.encode_plan().coeffs, data,
+                                 backend=self.backend)
+        return jnp.concatenate([data, parity], axis=1)
+
+    # ------------------------------------------------------------- repair
+    def repair_single(self, failed: int, available: Blocks,
+                      policy: str = "paper") -> tuple[jax.Array, CompiledPlan]:
+        """Rebuild one block across S stripes: (S, B) plus the cached plan."""
+        plan = self.planner.single_plan(failed, policy)
+        return self._execute(plan, available)[:, 0, :], plan
+
+    def repair_multi(self, failed: Iterable[int], available: Blocks
+                     ) -> tuple[dict[int, jax.Array], CompiledPlan]:
+        """Rebuild a failure pattern across S stripes in one launch.
+
+        Returns ``{block -> (S, B)}``; the cascade is pre-flattened by the
+        planner so there is exactly one kernel launch regardless of how many
+        blocks the pattern repairs.
+        """
+        plan = self.planner.multi_plan(failed)
+        out = self._execute(plan, available)
+        return {b: out[:, i, :] for i, b in enumerate(plan.targets)}, plan
+
+    # ------------------------------------------------------------- decode
+    def decode(self, available: Blocks, ids: Iterable[int] | None = None
+               ) -> jax.Array:
+        """(S, k, B) data blocks from any rank-k subset of surviving blocks.
+
+        ``ids`` names the surviving blocks; it may be omitted for a Mapping
+        availability (its keys are used).
+        """
+        if ids is None:
+            if not isinstance(available, Mapping):
+                raise ValueError("ids is required for dense availability")
+            ids = available.keys()
+        plan = self.planner.decode_plan(ids)
+        return self._execute(plan, available)

@@ -29,11 +29,14 @@ from repro.core.gf import PRIM_POLY
 _XT = PRIM_POLY & 0xFF  # 0x1D: xtime reduction constant
 
 
-def _gf256_matmul_kernel(coef_ref, data_ref, out_ref, *, k: int):
-    """One (TM, TB) output tile: loop data rows, bit-serial GF multiply."""
-    coef = coef_ref[...].astype(jnp.int32)  # (TM, k)
-    data = data_ref[...].astype(jnp.int32)  # (k, TB)
-    tm, tb = out_ref.shape
+def _gf256_tile_product(coef, data, *, k: int):
+    """(TM, k) x (k, TB) GF(2^8) tile product on int32 working values.
+
+    Shared body of the flat and batched kernels: loop data rows, bit-serial
+    GF multiply, XOR-accumulate.
+    """
+    tm = coef.shape[0]
+    tb = data.shape[1]
 
     def row_step(kk, acc):
         d = jax.lax.dynamic_slice(data, (kk, 0), (1, tb))       # (1, TB)
@@ -47,8 +50,25 @@ def _gf256_matmul_kernel(coef_ref, data_ref, out_ref, *, k: int):
             cf = cf >> 1
         return acc ^ prod
 
-    acc = jax.lax.fori_loop(0, k, row_step, jnp.zeros((tm, tb), jnp.int32))
-    out_ref[...] = acc.astype(jnp.uint8)
+    return jax.lax.fori_loop(0, k, row_step, jnp.zeros((tm, tb), jnp.int32))
+
+
+def _gf256_matmul_kernel(coef_ref, data_ref, out_ref, *, k: int):
+    """One (TM, TB) output tile: loop data rows, bit-serial GF multiply."""
+    coef = coef_ref[...].astype(jnp.int32)  # (TM, k)
+    data = data_ref[...].astype(jnp.int32)  # (k, TB)
+    out_ref[...] = _gf256_tile_product(coef, data, k=k).astype(jnp.uint8)
+
+
+def _gf256_matmul_batched_kernel(coef_ref, data_ref, out_ref, *, k: int):
+    """One stripe's (TM, TB) output tile of the (S, m, B) batched product.
+
+    The grid's leading axis walks stripes; the coefficient block is shared
+    across all of them (one compiled plan, S payloads).
+    """
+    coef = coef_ref[...].astype(jnp.int32)   # (TM, k)
+    data = data_ref[0].astype(jnp.int32)     # block (1, k, TB) -> (k, TB)
+    out_ref[0] = _gf256_tile_product(coef, data, k=k).astype(jnp.uint8)
 
 
 @functools.partial(jax.jit, static_argnames=("tile_m", "tile_b", "interpret"))
@@ -78,5 +98,39 @@ def gf256_matmul(coef: jax.Array, data: jax.Array, *,
         ],
         out_specs=pl.BlockSpec((tm, tb), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, b), jnp.uint8),
+        interpret=interpret,
+    )(coef, data)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_b", "interpret"))
+def gf256_matmul_batched(coef: jax.Array, data: jax.Array, *,
+                         tile_m: int = 8, tile_b: int = 512,
+                         interpret: bool = False) -> jax.Array:
+    """Batched GF(2^8) product ``coef (m,k) @ data (S,k,B) -> (S,m,B)``.
+
+    One Pallas launch covers every stripe in the batch: the grid gains a
+    leading stripe axis ``(S, m/TM, B/TB)`` and the data/output BlockSpecs
+    index it, while the (tiny) coefficient block is broadcast to all stripes.
+    This is the executor's workhorse — a fleet repair becomes a single launch
+    per failure pattern instead of S dispatches (DESIGN.md §4).
+    """
+    m, k = coef.shape
+    s, k2, b = data.shape
+    if k != k2:
+        raise ValueError(f"shape mismatch: coef {coef.shape} vs data {data.shape}")
+    tm = min(tile_m, m)
+    tb = min(tile_b, b)
+    if m % tm or b % tb:
+        raise ValueError(f"(m={m}, B={b}) must divide tiles ({tm}, {tb}); pad first")
+    grid = (s, m // tm, b // tb)
+    return pl.pallas_call(
+        functools.partial(_gf256_matmul_batched_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda si, i, j: (i, 0)),
+            pl.BlockSpec((1, k, tb), lambda si, i, j: (si, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, tm, tb), lambda si, i, j: (si, i, j)),
+        out_shape=jax.ShapeDtypeStruct((s, m, b), jnp.uint8),
         interpret=interpret,
     )(coef, data)

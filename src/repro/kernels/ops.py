@@ -21,9 +21,28 @@ from repro.core.gf import matrix_to_bitmatrix
 
 from . import ref as ref_lib
 from .bitmatrix_encode import bitmatrix_encode, mod2_matmul_encode
-from .gf256_matmul import gf256_matmul
+from .gf256_matmul import gf256_matmul, gf256_matmul_batched
 
 BACKENDS = ("gf", "crs", "mxu", "ref")
+
+
+def require_backend(backend: str) -> str:
+    """Validate a backend name, raising a clear error for unknown ones."""
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown kernel backend {backend!r}; expected one of {BACKENDS}")
+    return backend
+
+
+def matmul_backend(backend: str) -> str:
+    """Backend for general GF matmuls (repair/decode combines).
+
+    The bit-plane encode backends ("crs"/"mxu") have no general-matmul
+    formulation, so solve-style ops run on the jnp table path instead;
+    anything outside BACKENDS raises.
+    """
+    require_backend(backend)
+    return backend if backend in ("gf", "ref") else "ref"
 
 
 def _on_cpu() -> bool:
@@ -59,6 +78,40 @@ def gf_matmul_op(coef, data, *, backend: str = "gf",
     return out[:m, :b]
 
 
+def gf_matmul_batch_op(coef, data, *, backend: str = "gf",
+                       interpret: bool | None = None,
+                       force_pallas: bool = False) -> jax.Array:
+    """Batched GF(2^8) ``coef (m,k) @ data (S,k,B) -> (S,m,B)``.
+
+    One launch for the whole stripe batch; pads B to the tile size and m to
+    the TM granule, exactly like :func:`gf_matmul_op`.
+
+    On CPU hosts the Pallas interpreter is a correctness tool, not a
+    throughput path (it replays every grid cell), so an interpreted "gf"
+    batch executes as one fused table-path XLA call instead — bit-identical,
+    ~60x faster than S interpreted launches. ``force_pallas=True`` runs the
+    batched-grid kernel under the interpreter anyway (lockstep tests).
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    coef = jnp.asarray(coef, jnp.uint8)
+    data = jnp.asarray(data, jnp.uint8)
+    if data.ndim != 3:
+        raise ValueError(f"expected (S, k, B) data, got {data.shape}")
+    if backend == "ref":
+        return ref_lib.gf256_matmul_batched_ref(coef, data)
+    if backend != "gf":
+        raise ValueError(f"gf_matmul_batch_op supports gf/ref, got {backend}")
+    if interpret and not force_pallas:
+        return ref_lib.gf256_matmul_batched_ref(coef, data)
+    tile_b = 512 if not interpret else 128
+    padded, b = _pad_axis(data, 2, tile_b)
+    coef_p, m = _pad_axis(coef, 0, 8)
+    out = gf256_matmul_batched(coef_p, padded, tile_m=8,
+                               tile_b=tile_b, interpret=interpret)
+    return out[:, :m, :b]
+
+
 def crs_encode_op(coding: np.ndarray, blocks, *, backend: str = "crs",
                   interpret: bool | None = None) -> jax.Array:
     """CRS path: byte blocks (k, B) -> parity (m, B) via the bitmatrix of the
@@ -87,10 +140,33 @@ def crs_encode_op(coding: np.ndarray, blocks, *, backend: str = "crs",
 def encode_op(coding: np.ndarray, blocks, *, backend: str = "gf",
               interpret: bool | None = None) -> jax.Array:
     """Unified stripe-parity computation across all backends."""
+    require_backend(backend)
     if backend in ("gf", "ref"):
         return gf_matmul_op(np.asarray(coding, np.uint8), blocks,
                             backend=backend, interpret=interpret)
     return crs_encode_op(coding, blocks, backend=backend, interpret=interpret)
+
+
+def encode_batch_op(coding: np.ndarray, blocks, *, backend: str = "gf",
+                    interpret: bool | None = None) -> jax.Array:
+    """Batched stripe-parity: ``blocks (S, k, B) -> parity (S, m, B)``.
+
+    gf/ref run the batched kernel directly. The bit-plane backends (crs/mxu)
+    apply the same coding matrix column-wise, so the stripe axis folds into
+    the byte axis — ``(S,k,B) -> (k, S*B)`` — and one 2-D launch covers the
+    batch (each output byte depends only on its own column; exact).
+    """
+    require_backend(backend)
+    blocks = jnp.asarray(blocks, jnp.uint8)
+    if blocks.ndim != 3:
+        raise ValueError(f"expected (S, k, B) blocks, got {blocks.shape}")
+    if backend in ("gf", "ref"):
+        return gf_matmul_batch_op(np.asarray(coding, np.uint8), blocks,
+                                  backend=backend, interpret=interpret)
+    s, k, b = blocks.shape
+    folded = jnp.transpose(blocks, (1, 0, 2)).reshape(k, s * b)
+    par = crs_encode_op(coding, folded, backend=backend, interpret=interpret)
+    return jnp.transpose(par.reshape(-1, s, b), (1, 0, 2))
 
 
 @functools.lru_cache(maxsize=None)

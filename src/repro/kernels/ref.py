@@ -29,6 +29,15 @@ def gf256_matmul_ref(coef: jax.Array, data: jax.Array) -> jax.Array:
                           lambda a, b: jax.lax.bitwise_xor(a, b), (1,))
 
 
+def gf256_matmul_batched_ref(coef: jax.Array, data: jax.Array) -> jax.Array:
+    """Batched oracle: ``coef (m,k) @ data (S,k,B) -> (S,m,B)``, table path.
+
+    vmap of :func:`gf256_matmul_ref` over the stripe axis — bit-exact lockstep
+    for the batched Pallas kernel.
+    """
+    return jax.vmap(gf256_matmul_ref, in_axes=(None, 0))(coef, data)
+
+
 def gf256_matmul_shift_ref(coef: jax.Array, data: jax.Array) -> jax.Array:
     """Same product via the table-free shift-and-XOR algorithm the TPU kernel
     uses (oracle for the algorithm itself, not just the result)."""

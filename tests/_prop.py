@@ -1,0 +1,81 @@
+"""Property-test shim: real hypothesis when installed, deterministic fallback
+when not.
+
+The tier-1 container does not ship ``hypothesis`` (see requirements-dev.txt
+to install it); property tests must still *run*, not error at collection.
+With hypothesis absent, ``given`` replays a fixed number of seeded,
+deterministic samples per strategy — far weaker than real shrinking/search,
+but it keeps every property exercised on the same assertion bodies.
+
+Usage in test modules::
+
+    from _prop import HAVE_HYPOTHESIS, given, settings, st
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+
+    import numpy as np
+    import pytest
+
+    _FALLBACK_EXAMPLES = 25
+    _SEED = 0xC0DEC
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample  # rng -> value
+
+    class st:  # noqa: N801 — mirrors `strategies as st`
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[int(rng.integers(len(elements)))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    def settings(max_examples=_FALLBACK_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._prop_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(**fixtures):
+                n = getattr(wrapper, "_prop_max_examples", _FALLBACK_EXAMPLES)
+                rng = np.random.default_rng(_SEED)
+                skips = []
+                for _ in range(n):
+                    args = [s.sample(rng) for s in strategies]
+                    try:
+                        fn(*args, **fixtures)
+                    except pytest.skip.Exception as e:
+                        # Per-example skip (hypothesis `assume` idiom); only
+                        # skip the test if every example bailed.
+                        skips.append(e)
+                if len(skips) == n:
+                    raise skips[0]
+            # pytest must not mistake the strategy params for fixtures.
+            sig = inspect.signature(fn)
+            keep = list(sig.parameters.values())[len(strategies):]
+            wrapper.__signature__ = sig.replace(parameters=keep)
+            del wrapper.__wrapped__
+            return wrapper
+        return deco
