@@ -10,6 +10,7 @@ Sections (paper analogue in brackets):
   blocksize_sweep   repair time/throughput vs block size    [Figs 7, 8]
   filelevel         file-level degraded-read optimization   [Fig 10]
   batched_repair    batched vs per-stripe repair throughput [PR-1 tentpole]
+  sharded_repair    repair throughput vs device count        [PR-2 tentpole]
   kernels           encode kernels vs jnp reference          [§V substrate]
   ckpt_stripes      EC-checkpoint encode/repair per arch    [framework]
   roofline          dry-run roofline table                   [deliverable g]
@@ -26,8 +27,8 @@ from pathlib import Path
 RESULTS = Path(__file__).resolve().parent / "results"
 
 SECTIONS = ("repair_costs", "local_portion", "mttdl", "repair_time",
-            "blocksize_sweep", "filelevel", "batched_repair", "kernels",
-            "ckpt_stripes", "roofline")
+            "blocksize_sweep", "filelevel", "batched_repair",
+            "sharded_repair", "kernels", "ckpt_stripes", "roofline")
 
 
 def main() -> None:

@@ -14,15 +14,22 @@ pass ragged last batches of any size, including S=1.
 Availability can be given either as a dense ``(S, n, B)`` array or as a
 mapping ``block-id -> (S, B)`` holding only surviving blocks; both gather to
 the plan's read order before the launch.
+
+Passing :class:`~repro.dist.sharding.MeshRules` (at construction or per
+call) shards the stripe axis over the mesh's data axes — one device-parallel
+launch per call via ``repro.dist.stripes`` — with bit-identical results;
+``last_span`` reports how many devices the most recent launch spread over.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Mapping, Union
+from typing import Iterable, Mapping, Optional, Union
 
 import jax
 import numpy as np
 
+from repro.dist.sharding import MeshRules
+from repro.dist.stripes import stripe_span
 from repro.kernels.ops import encode_batch_op, gf_matmul_batch_op, matmul_backend, require_backend
 
 from .planner import CompiledPlan, RepairPlanner
@@ -36,6 +43,8 @@ class BatchedCodecEngine:
     scheme: LRCScheme
     backend: str = "gf"
     planner: RepairPlanner | None = None
+    mesh_rules: MeshRules | None = None
+    last_span: int = dataclasses.field(default=1, init=False)
 
     def __post_init__(self):
         require_backend(self.backend)
@@ -43,6 +52,9 @@ class BatchedCodecEngine:
             self.planner = RepairPlanner(self.scheme)
         elif self.planner.scheme is not self.scheme:
             raise ValueError("planner is bound to a different scheme")
+
+    def _rules(self, mesh_rules: Optional[MeshRules]) -> Optional[MeshRules]:
+        return self.mesh_rules if mesh_rules is None else mesh_rules
 
     # --------------------------------------------------------------- helpers
     def _gather(self, available: Blocks, reads: tuple[int, ...]) -> jax.Array:
@@ -63,8 +75,8 @@ class BatchedCodecEngine:
             raise ValueError(f"expected (S, n, B) availability, got {arr.shape}")
         return arr[:, list(reads), :]
 
-    def execute(self, plan: CompiledPlan, stacked: jax.Array | np.ndarray
-                ) -> jax.Array:
+    def execute(self, plan: CompiledPlan, stacked: jax.Array | np.ndarray,
+                mesh_rules: Optional[MeshRules] = None) -> jax.Array:
         """Run a compiled plan on an already-gathered (S, |reads|, B) stack.
 
         The zero-copy entry point for callers that materialize the read
@@ -77,14 +89,20 @@ class BatchedCodecEngine:
         if stacked.ndim != 3 or stacked.shape[1] != len(plan.reads):
             raise ValueError(f"expected (S, {len(plan.reads)}, B) stack for "
                              f"plan reads {plan.reads}, got {stacked.shape}")
+        mr = self._rules(mesh_rules)
+        self.last_span = stripe_span(stacked.shape, mr)
         return gf_matmul_batch_op(plan.coeffs, stacked,
-                                  backend=matmul_backend(self.backend))
+                                  backend=matmul_backend(self.backend),
+                                  mesh_rules=mr)
 
-    def _execute(self, plan: CompiledPlan, available: Blocks) -> jax.Array:
-        return self.execute(plan, self._gather(available, plan.reads))
+    def _execute(self, plan: CompiledPlan, available: Blocks,
+                 mesh_rules: Optional[MeshRules] = None) -> jax.Array:
+        return self.execute(plan, self._gather(available, plan.reads),
+                            mesh_rules)
 
     # ------------------------------------------------------------- encoding
-    def encode(self, data: jax.Array | np.ndarray) -> jax.Array:
+    def encode(self, data: jax.Array | np.ndarray,
+               mesh_rules: Optional[MeshRules] = None) -> jax.Array:
         """(S, k, B) data -> (S, n, B) systematic stripes, one launch."""
         import jax.numpy as jnp
 
@@ -92,32 +110,37 @@ class BatchedCodecEngine:
         if data.ndim != 3 or data.shape[1] != self.scheme.k:
             raise ValueError(
                 f"expected (S, {self.scheme.k}, B) data, got {data.shape}")
+        mr = self._rules(mesh_rules)
+        self.last_span = stripe_span(data.shape, mr)
         parity = encode_batch_op(self.planner.encode_plan().coeffs, data,
-                                 backend=self.backend)
+                                 backend=self.backend, mesh_rules=mr)
         return jnp.concatenate([data, parity], axis=1)
 
     # ------------------------------------------------------------- repair
     def repair_single(self, failed: int, available: Blocks,
-                      policy: str = "paper") -> tuple[jax.Array, CompiledPlan]:
+                      policy: str = "paper",
+                      mesh_rules: Optional[MeshRules] = None
+                      ) -> tuple[jax.Array, CompiledPlan]:
         """Rebuild one block across S stripes: (S, B) plus the cached plan."""
         plan = self.planner.single_plan(failed, policy)
-        return self._execute(plan, available)[:, 0, :], plan
+        return self._execute(plan, available, mesh_rules)[:, 0, :], plan
 
-    def repair_multi(self, failed: Iterable[int], available: Blocks
+    def repair_multi(self, failed: Iterable[int], available: Blocks,
+                     mesh_rules: Optional[MeshRules] = None
                      ) -> tuple[dict[int, jax.Array], CompiledPlan]:
         """Rebuild a failure pattern across S stripes in one launch.
 
         Returns ``{block -> (S, B)}``; the cascade is pre-flattened by the
         planner so there is exactly one kernel launch regardless of how many
-        blocks the pattern repairs.
+        blocks the pattern repairs — one per device when sharded.
         """
         plan = self.planner.multi_plan(failed)
-        out = self._execute(plan, available)
+        out = self._execute(plan, available, mesh_rules)
         return {b: out[:, i, :] for i, b in enumerate(plan.targets)}, plan
 
     # ------------------------------------------------------------- decode
-    def decode(self, available: Blocks, ids: Iterable[int] | None = None
-               ) -> jax.Array:
+    def decode(self, available: Blocks, ids: Iterable[int] | None = None,
+               mesh_rules: Optional[MeshRules] = None) -> jax.Array:
         """(S, k, B) data blocks from any rank-k subset of surviving blocks.
 
         ``ids`` names the surviving blocks; it may be omitted for a Mapping
@@ -128,4 +151,4 @@ class BatchedCodecEngine:
                 raise ValueError("ids is required for dense availability")
             ids = available.keys()
         plan = self.planner.decode_plan(ids)
-        return self._execute(plan, available)
+        return self._execute(plan, available, mesh_rules)

@@ -1,0 +1,23 @@
+"""Distribution layer: logical-axis sharding rules + stripe-batch sharding.
+
+``repro.dist.sharding`` maps *logical* axis names ("batch", "heads", "ff",
+...) onto mesh axes with divisibility degradation — the contract the model,
+train, serve and launch layers program against. ``repro.dist.stripes`` is
+the codec-side counterpart: it shards the stripe axis ``S`` of ``(S, k, B)``
+batches over the mesh's data-parallel axes so fleet repair scales past one
+device.
+"""
+from .sharding import (  # noqa: F401
+    MeshRules,
+    _resolve,
+    current_rules,
+    opt_state_sharding,
+    shard_activation,
+    with_rules,
+)
+from .stripes import (  # noqa: F401
+    sharded_launch,
+    stripe_sharding,
+    stripe_span,
+    stripe_spec,
+)

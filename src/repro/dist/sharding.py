@@ -1,0 +1,175 @@
+"""Logical-axis sharding: rules, resolution and degradation.
+
+Models annotate parameters and activations with *logical* axis names
+("batch", "heads", "ff", ...). This module owns the mapping from logical
+names to mesh axes and resolves it per-tensor with two safety rules:
+
+* **Divisibility degradation** — a mesh axis is only assigned to a dimension
+  it divides evenly; otherwise the dimension silently replicates (``None``).
+  This is what lets one set of rules serve every config: grok's 8 experts on
+  a 16-way "model" axis degrade to replicated experts (the expert FFNs then
+  tensor-parallel-shard over the freed axis), arctic's odd head counts
+  replicate, smoke configs on a 1x1 host mesh resolve to trivial specs.
+* **Each mesh axis at most once per spec** — GSPMD rejects duplicate mesh
+  axes within one ``PartitionSpec``; the first (leftmost) logical dimension
+  that can legally claim an axis wins, later claimants degrade.
+
+``with_rules(mesh, overrides)`` installs a :class:`MeshRules` as the ambient
+context so deep model code can call :func:`shard_activation` without
+threading a handle through every layer; outside any context it is a no-op,
+which is how the single-process smoke tests run the exact production model
+code without a mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Iterator, Mapping, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Logical-axis -> candidate mesh axes, tried left to right. Absent, claimed
+# or indivisible axes are skipped (degradation); an empty tuple is an inert
+# axis that only shards when a rule override maps it somewhere (e.g. the
+# dry-run maps "kv_seq" -> ("data",) for batch=1 long-context cells, and the
+# perf harness maps "seq" -> ("model",) for sequence-parallel activations).
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("data", "pod"),
+    "stripes": ("data", "pod"),
+    "seq": (),
+    "kv_seq": (),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ff": ("model",),
+    "experts": ("model",),
+    "expert_ff": ("model",),
+    "inner": ("model",),
+    "vocab": ("model",),
+}
+
+# Data-parallel axes used by the ZeRO/FSDP extension (opt_state_sharding).
+DATA_AXES = ("data", "pod")
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    """A mesh plus the active logical-axis -> mesh-axes rules."""
+    mesh: Mesh
+    rules: Mapping[str, tuple[str, ...]]
+
+    def axes_for(self, name: Optional[str]) -> tuple[str, ...]:
+        if name is None:
+            return ()
+        return self.rules.get(name, ())
+
+
+_ACTIVE: contextvars.ContextVar[Optional[MeshRules]] = contextvars.ContextVar(
+    "repro_dist_mesh_rules", default=None)
+
+
+def _normalize(overrides: Optional[Mapping]) -> dict[str, tuple[str, ...]]:
+    out: dict[str, tuple[str, ...]] = {}
+    for name, axes in (overrides or {}).items():
+        if axes is None:
+            axes = ()
+        elif isinstance(axes, str):
+            axes = (axes,)
+        out[name] = tuple(axes)
+    return out
+
+
+@contextlib.contextmanager
+def with_rules(mesh: Mesh, overrides: Optional[Mapping] = None
+               ) -> Iterator[MeshRules]:
+    """Install ``mesh`` + (DEFAULT_RULES | overrides) as the ambient context.
+
+    Yields the :class:`MeshRules`, which every resolution helper takes
+    explicitly; :func:`shard_activation` picks it up implicitly.
+    """
+    mr = MeshRules(mesh=mesh, rules={**DEFAULT_RULES, **_normalize(overrides)})
+    token = _ACTIVE.set(mr)
+    try:
+        yield mr
+    finally:
+        _ACTIVE.reset(token)
+
+
+def current_rules() -> Optional[MeshRules]:
+    """The ambient MeshRules, or None outside any ``with_rules`` block."""
+    return _ACTIVE.get()
+
+
+def _resolve(shape: Sequence[int], names: Sequence[Optional[str]],
+             mr: MeshRules) -> P:
+    """Logical names -> PartitionSpec under ``mr`` with degradation.
+
+    Per dimension, candidate mesh axes are tried in rule order; an axis is
+    assigned only if it exists in the mesh, is not already claimed by an
+    earlier dimension of this spec, and evenly divides what remains of the
+    dimension after earlier assignments. Multiple surviving axes for one
+    dimension become a tuple entry; zero become ``None`` (replicate).
+    """
+    axis_sizes = dict(mr.mesh.shape)
+    used: set[str] = set()
+    entries: list = []
+    for dim, name in zip(shape, names):
+        picked: list[str] = []
+        remaining = int(dim)
+        for ax in mr.axes_for(name):
+            size = axis_sizes.get(ax)
+            if size is None or ax in used or remaining % size != 0:
+                continue
+            picked.append(ax)
+            used.add(ax)
+            remaining //= size
+        entries.append(picked[0] if len(picked) == 1
+                       else tuple(picked) if picked else None)
+    return P(*entries)
+
+
+def shard_activation(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """Constrain an activation to the resolved spec of ``names``.
+
+    Reads the ambient :class:`MeshRules`; with none active (unit tests, the
+    serve engine without a mesh) it returns ``x`` untouched, so model code is
+    unconditional.
+    """
+    mr = _ACTIVE.get()
+    if mr is None:
+        return x
+    spec = _resolve(x.shape, names, mr)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mr.mesh, spec))
+
+
+def opt_state_sharding(spec: P, shape: Sequence[int], mr: MeshRules
+                       ) -> NamedSharding:
+    """ZeRO/FSDP extension: spread free data-parallel axes over ``spec``.
+
+    Optimizer moments (and FSDP'd parameters) replicate along whatever the
+    parameter spec leaves unsharded; this assigns the mesh's unclaimed
+    data axes (:data:`DATA_AXES`) to the largest still-replicated divisible
+    dimension, largest dimension first, so the f32 moments of giant configs
+    spread over the full device count instead of living whole on every chip.
+    """
+    axis_sizes = dict(mr.mesh.shape)
+    entries: list = list(spec) + [None] * (len(shape) - len(spec))
+    entries = entries[:len(shape)]
+    used = {ax for e in entries if e is not None
+            for ax in ((e,) if isinstance(e, str) else tuple(e))}
+    free = [ax for ax in DATA_AXES if ax in axis_sizes and ax not in used]
+    for i in sorted((i for i, e in enumerate(entries) if e is None),
+                    key=lambda i: -int(shape[i])):
+        if not free:
+            break
+        picked, remaining = [], int(shape[i])
+        for ax in list(free):
+            if remaining % axis_sizes[ax] != 0:
+                continue
+            picked.append(ax)
+            free.remove(ax)
+            remaining //= axis_sizes[ax]
+        if picked:
+            entries[i] = picked[0] if len(picked) == 1 else tuple(picked)
+    return NamedSharding(mr.mesh, P(*entries))

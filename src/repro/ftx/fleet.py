@@ -101,6 +101,8 @@ class FleetRepairReport:
     repairs_local: int
     repairs_global: int
     plan_cache: dict            # planner hit/miss/eviction counters
+    devices: int = 1            # widest device span of any launch
+    device_launches: int = 0    # per-device kernel executions, all launches
 
     @property
     def stripes_per_launch(self) -> float:
@@ -110,19 +112,24 @@ class FleetRepairReport:
 def repair_failed_nodes(store, nodes: Iterable[int], *,
                         spare_of: Optional[dict[int, int]] = None,
                         revive: bool = True,
-                        batched: bool = True) -> FleetRepairReport:
+                        batched: bool = True,
+                        mesh_rules=None) -> FleetRepairReport:
     """Fail ``nodes`` and rebuild every affected stripe in the store.
 
     All stripes whose blocks lived on the failed nodes are grouped by
     failure pattern and repaired through the store's batched engine — one
-    launch per (pattern, chunk). ``revive`` marks the nodes UP again after
+    launch per (pattern, chunk). ``mesh_rules`` (or an ambient
+    ``with_rules`` context) device-shards each launch's stripe axis; the
+    report's ``devices``/``device_launches`` fields record the resulting
+    per-device launch counts. ``revive`` marks the nodes UP again after
     the rebuild (blocks were re-materialized in place or onto spares).
     """
     nodes = tuple(nodes)
     for node in nodes:
         store.fail_node(node)
     before = store.codec.planner.stats.snapshot()
-    tele = store.repair_all(spare_of=spare_of, batched=batched)
+    tele = store.repair_all(spare_of=spare_of, batched=batched,
+                            mesh_rules=mesh_rules)
     after = store.codec.planner.stats.snapshot()
     if revive:
         for node in nodes:
@@ -132,6 +139,8 @@ def repair_failed_nodes(store, nodes: Iterable[int], *,
         stripes_repaired=tele["stripes_repaired"],
         patterns=tele["patterns"],
         launches=tele["launches"],
+        devices=tele.get("devices", 1),
+        device_launches=tele.get("device_launches", tele["launches"]),
         blocks_read=tele["blocks_read"],
         bytes_read=tele["bytes_read"],
         sim_seconds=tele["sim_seconds"],

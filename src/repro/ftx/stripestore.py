@@ -290,7 +290,7 @@ class StripeStore:
         self.nodes[node] = NodeState.UP
 
     def repair_all(self, spare_of: Optional[dict[int, int]] = None, *,
-                   batched: bool = True) -> dict:
+                   batched: bool = True, mesh_rules=None) -> dict:
         """Rebuild every block resident on DOWN nodes onto spares (or back in
         place) using the multi-node planner. Returns telemetry for the repair
         (the paper's repair-time experiments).
@@ -301,7 +301,16 @@ class StripeStore:
         ``cfg.batch_stripes`` stripes — instead of one solve + one launch per
         stripe. ``batched=False`` keeps the seed per-stripe loop (benchmark
         baseline). Results are bit-identical between the two paths.
+
+        ``mesh_rules`` (or an ambient ``with_rules`` context) shards each
+        launch's stripe axis over the mesh's data axes: one device-parallel
+        launch per pattern chunk. Telemetry reports ``devices`` (widest
+        device span seen) and ``device_launches`` (total per-device kernel
+        executions across all launches).
         """
+        from repro.dist.sharding import current_rules
+
+        mr = mesh_rules if mesh_rules is not None else current_rules()
         before = dataclasses.replace(self.telemetry)
         t0 = time.perf_counter()
         affected: dict[frozenset[int], list[int]] = {}
@@ -310,6 +319,8 @@ class StripeStore:
             if down:
                 affected.setdefault(down, []).append(sid)
         launches = 0
+        devices = 1
+        device_launches = 0
         for down, sids in sorted(affected.items(), key=lambda kv: kv[1][0]):
             if batched:
                 try:
@@ -325,9 +336,11 @@ class StripeStore:
                 step = max(1, min(self.cfg.batch_stripes,
                                   _BATCH_BYTE_BUDGET // max(1, per_stripe)))
                 for lo in range(0, len(sids), step):
-                    self._repair_group(sids[lo:lo + step], down, compiled,
-                                       spare_of)
+                    span = self._repair_group(sids[lo:lo + step], down,
+                                              compiled, spare_of, mr)
                     launches += 1
+                    devices = max(devices, span)
+                    device_launches += span
             else:
                 for sid in sids:
                     plan = multi_repair_plan(self.scheme, down)
@@ -338,11 +351,14 @@ class StripeStore:
                                         {b: v[None] for b, v in rebuilt.items()},
                                         spare_of)
                     launches += 1
+                    device_launches += 1
         t = dataclasses.replace(self.telemetry)
         return {
             "stripes_repaired": sum(len(sids) for sids in affected.values()),
             "patterns": len(affected),
             "launches": launches,
+            "devices": devices,
+            "device_launches": device_launches,
             "batched": batched,
             "blocks_read": t.blocks_read - before.blocks_read,
             "bytes_read": t.bytes_read - before.bytes_read,
@@ -353,18 +369,21 @@ class StripeStore:
         }
 
     def _repair_group(self, sids: list[int], down: frozenset[int],
-                      compiled, spare_of: Optional[dict[int, int]]) -> None:
+                      compiled, spare_of: Optional[dict[int, int]],
+                      mesh_rules=None) -> int:
         """Batched repair of stripes sharing one failure pattern: fill ONE
         preallocated (S, |reads|, B) stack straight from disk and run a
-        single launch (no per-block intermediate copies)."""
+        single launch (device-parallel under ``mesh_rules``; no per-block
+        intermediate copies). Returns the device span of the launch."""
         stacked = np.empty((len(sids), len(compiled.reads),
                             self.cfg.block_size), np.uint8)
         for i, sid in enumerate(sids):
             for j, b in enumerate(compiled.reads):
                 stacked[i, j] = self._read_block(sid, b)
-        out = np.asarray(self.engine.execute(compiled, stacked))
+        out = np.asarray(self.engine.execute(compiled, stacked, mesh_rules))
         rebuilt = {b: out[:, t, :] for t, b in enumerate(compiled.targets)}
         self._finish_repair(sids, down, compiled.meta, rebuilt, spare_of)
+        return self.engine.last_span
 
     def _finish_repair(self, sids: list[int], down: frozenset[int], plan,
                        rebuilt: dict[int, np.ndarray],

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.gf import matrix_to_bitmatrix
+from repro.dist.stripes import sharded_launch
 
 from . import ref as ref_lib
 from .bitmatrix_encode import bitmatrix_encode, mod2_matmul_encode
@@ -78,30 +79,11 @@ def gf_matmul_op(coef, data, *, backend: str = "gf",
     return out[:m, :b]
 
 
-def gf_matmul_batch_op(coef, data, *, backend: str = "gf",
-                       interpret: bool | None = None,
-                       force_pallas: bool = False) -> jax.Array:
-    """Batched GF(2^8) ``coef (m,k) @ data (S,k,B) -> (S,m,B)``.
-
-    One launch for the whole stripe batch; pads B to the tile size and m to
-    the TM granule, exactly like :func:`gf_matmul_op`.
-
-    On CPU hosts the Pallas interpreter is a correctness tool, not a
-    throughput path (it replays every grid cell), so an interpreted "gf"
-    batch executes as one fused table-path XLA call instead — bit-identical,
-    ~60x faster than S interpreted launches. ``force_pallas=True`` runs the
-    batched-grid kernel under the interpreter anyway (lockstep tests).
-    """
-    if interpret is None:
-        interpret = _on_cpu()
-    coef = jnp.asarray(coef, jnp.uint8)
-    data = jnp.asarray(data, jnp.uint8)
-    if data.ndim != 3:
-        raise ValueError(f"expected (S, k, B) data, got {data.shape}")
+def _gf_batch_kernel(coef, data, *, backend: str, interpret: bool,
+                     force_pallas: bool) -> jax.Array:
+    """Single-device body of the batched GF matmul (shard_map-able)."""
     if backend == "ref":
         return ref_lib.gf256_matmul_batched_ref(coef, data)
-    if backend != "gf":
-        raise ValueError(f"gf_matmul_batch_op supports gf/ref, got {backend}")
     if interpret and not force_pallas:
         return ref_lib.gf256_matmul_batched_ref(coef, data)
     tile_b = 512 if not interpret else 128
@@ -112,14 +94,42 @@ def gf_matmul_batch_op(coef, data, *, backend: str = "gf",
     return out[:, :m, :b]
 
 
-def crs_encode_op(coding: np.ndarray, blocks, *, backend: str = "crs",
-                  interpret: bool | None = None) -> jax.Array:
-    """CRS path: byte blocks (k, B) -> parity (m, B) via the bitmatrix of the
-    GF coding matrix. B is padded to a multiple of the packet granularity."""
+def gf_matmul_batch_op(coef, data, *, backend: str = "gf",
+                       interpret: bool | None = None,
+                       force_pallas: bool = False,
+                       mesh_rules=None) -> jax.Array:
+    """Batched GF(2^8) ``coef (m,k) @ data (S,k,B) -> (S,m,B)``.
+
+    One launch for the whole stripe batch; pads B to the tile size and m to
+    the TM granule, exactly like :func:`gf_matmul_op`.
+
+    On CPU hosts the Pallas interpreter is a correctness tool, not a
+    throughput path (it replays every grid cell), so an interpreted "gf"
+    batch executes as one fused table-path XLA call instead — bit-identical,
+    ~60x faster than S interpreted launches. ``force_pallas=True`` runs the
+    batched-grid kernel under the interpreter anyway (lockstep tests).
+
+    ``mesh_rules`` shards the stripe axis over the mesh's data axes and runs
+    one launch per device via ``shard_map`` (repro.dist.stripes); an
+    indivisible S degrades to the single-device launch. Stripes are
+    independent, so the result is bit-identical either way.
+    """
     if interpret is None:
         interpret = _on_cpu()
-    blocks = jnp.asarray(blocks, jnp.uint8)
-    bm = jnp.asarray(matrix_to_bitmatrix(np.asarray(coding, np.uint8)))
+    coef = jnp.asarray(coef, jnp.uint8)
+    data = jnp.asarray(data, jnp.uint8)
+    if data.ndim != 3:
+        raise ValueError(f"expected (S, k, B) data, got {data.shape}")
+    if backend not in ("gf", "ref"):
+        raise ValueError(f"gf_matmul_batch_op supports gf/ref, got {backend}")
+    return sharded_launch(_gf_batch_kernel, coef, data, mesh_rules,
+                          backend=backend, interpret=interpret,
+                          force_pallas=force_pallas)
+
+
+def _crs_bitmatrix_apply(bm, blocks, *, backend: str,
+                         interpret: bool) -> jax.Array:
+    """Bit-plane encode of byte blocks (k, B) by a precomputed bitmatrix."""
     tile_p = 1024 if backend == "crs" else 256
     if interpret:
         tile_p = 64
@@ -137,6 +147,33 @@ def crs_encode_op(coding: np.ndarray, blocks, *, backend: str = "crs",
     return ref_lib.unpacketize(par)[:, :b]
 
 
+def crs_encode_op(coding: np.ndarray, blocks, *, backend: str = "crs",
+                  interpret: bool | None = None) -> jax.Array:
+    """CRS path: byte blocks (k, B) -> parity (m, B) via the bitmatrix of the
+    GF coding matrix. B is padded to a multiple of the packet granularity."""
+    if interpret is None:
+        interpret = _on_cpu()
+    blocks = jnp.asarray(blocks, jnp.uint8)
+    bm = jnp.asarray(matrix_to_bitmatrix(np.asarray(coding, np.uint8)))
+    return _crs_bitmatrix_apply(bm, blocks, backend=backend,
+                                interpret=interpret)
+
+
+def _crs_batch_kernel(bm, blocks, *, backend: str,
+                      interpret: bool) -> jax.Array:
+    """Single-device body of the batched bit-plane encode (shard_map-able).
+
+    The coding matrix applies column-wise, so the stripe axis folds into the
+    byte axis — ``(S,k,B) -> (k, S*B)`` — and one 2-D launch covers the local
+    batch (each output byte depends only on its own column; exact).
+    """
+    s, k, b = blocks.shape
+    folded = jnp.transpose(blocks, (1, 0, 2)).reshape(k, s * b)
+    par = _crs_bitmatrix_apply(bm, folded, backend=backend,
+                               interpret=interpret)
+    return jnp.transpose(par.reshape(-1, s, b), (1, 0, 2))
+
+
 def encode_op(coding: np.ndarray, blocks, *, backend: str = "gf",
               interpret: bool | None = None) -> jax.Array:
     """Unified stripe-parity computation across all backends."""
@@ -148,13 +185,14 @@ def encode_op(coding: np.ndarray, blocks, *, backend: str = "gf",
 
 
 def encode_batch_op(coding: np.ndarray, blocks, *, backend: str = "gf",
-                    interpret: bool | None = None) -> jax.Array:
+                    interpret: bool | None = None,
+                    mesh_rules=None) -> jax.Array:
     """Batched stripe-parity: ``blocks (S, k, B) -> parity (S, m, B)``.
 
-    gf/ref run the batched kernel directly. The bit-plane backends (crs/mxu)
-    apply the same coding matrix column-wise, so the stripe axis folds into
-    the byte axis — ``(S,k,B) -> (k, S*B)`` — and one 2-D launch covers the
-    batch (each output byte depends only on its own column; exact).
+    gf/ref run the batched kernel directly; the bit-plane backends (crs/mxu)
+    fold the stripe axis into the byte axis per device (see
+    :func:`_crs_batch_kernel`). ``mesh_rules`` shards the stripe axis over
+    the mesh's data axes, one launch per device.
     """
     require_backend(backend)
     blocks = jnp.asarray(blocks, jnp.uint8)
@@ -162,11 +200,13 @@ def encode_batch_op(coding: np.ndarray, blocks, *, backend: str = "gf",
         raise ValueError(f"expected (S, k, B) blocks, got {blocks.shape}")
     if backend in ("gf", "ref"):
         return gf_matmul_batch_op(np.asarray(coding, np.uint8), blocks,
-                                  backend=backend, interpret=interpret)
-    s, k, b = blocks.shape
-    folded = jnp.transpose(blocks, (1, 0, 2)).reshape(k, s * b)
-    par = crs_encode_op(coding, folded, backend=backend, interpret=interpret)
-    return jnp.transpose(par.reshape(-1, s, b), (1, 0, 2))
+                                  backend=backend, interpret=interpret,
+                                  mesh_rules=mesh_rules)
+    if interpret is None:
+        interpret = _on_cpu()
+    bm = jnp.asarray(matrix_to_bitmatrix(np.asarray(coding, np.uint8)))
+    return sharded_launch(_crs_batch_kernel, bm, blocks, mesh_rules,
+                          backend=backend, interpret=interpret)
 
 
 @functools.lru_cache(maxsize=None)

@@ -1,7 +1,11 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# ^^ MUST precede every other import (jax locks the device count on first
-# init). 512 placeholder host devices back the 2x16x16 production mesh.
+
+if __name__ == "__main__":
+    # MUST precede every other import (jax locks the device count on first
+    # init). 512 placeholder host devices back the 2x16x16 production mesh.
+    # Guarded so importing this module (tests, benchmarks) never mutates the
+    # host's device topology.
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 """Multi-pod dry-run driver.
 

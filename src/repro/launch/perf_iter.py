@@ -1,6 +1,9 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# ^^ must precede jax init (see dryrun.py).
+
+if __name__ == "__main__":
+    # must precede jax init; guarded against import side effects (see
+    # dryrun.py).
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 """§Perf hillclimbing harness.
 

@@ -1,7 +1,8 @@
 import os
 
-# Keep the test suite on the host's real device topology (1 CPU device) —
-# the 512-device dry-run flag is set ONLY inside repro.launch.dryrun.
+# Keep the test suite on the host's device topology — the 512-device
+# dry-run flag is set only when repro.launch.dryrun runs as __main__, and
+# the multi-device CI leg opts in via XLA_FLAGS in the environment.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import numpy as np

@@ -19,13 +19,50 @@ def test_resolve_divisible(mesh):
         assert spec == P("data", "model")
 
 
+@pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
 def test_resolve_indivisible_degrades():
-    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    """Real degradation cases on a 2x4 mesh (the multi-device CI leg)."""
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
     with with_rules(mesh) as mr:
-        pass
-    # simulate a 16-way model axis by faking rule checks on a bigger mesh is
-    # not possible on 1 device; the fallback logic is covered via dryrun
-    # results (grok experts replicate, arctic heads replicate).
+        # divisible everywhere: both axes assigned
+        assert _resolve((8, 8), ("batch", "ff"), mr) == P("data", "model")
+        # 4-way model axis does not divide 3 heads -> replicate (arctic case)
+        assert _resolve((6, 3), ("batch", "heads"), mr) == P("data", None)
+        # 2-way data axis does not divide batch 3 -> replicate
+        assert _resolve((3, 8), ("batch", "ff"), mr) == P(None, "model")
+        # grok case: indivisible experts degrade, freeing "model" for the
+        # expert FFN dim (tensor-parallel expert FFNs)
+        assert _resolve((3, 16, 32), ("experts", None, "expert_ff"), mr) \
+            == P(None, None, "model")
+        # divisible experts claim "model" first; expert_ff then degrades
+        assert _resolve((4, 16, 32), ("experts", None, "expert_ff"), mr) \
+            == P("model", None, None)
+        # opt_state_sharding degradation: the largest replicated dim (7) is
+        # indivisible by "data"(2), so it is skipped and the next-largest
+        # divisible dim (4) takes the axis instead
+        ns = opt_state_sharding(P(), (7, 4), mr)
+        assert ns.spec == P(None, "data")
+        # nothing divisible -> fully replicated
+        ns = opt_state_sharding(P(), (7, 5), mr)
+        assert all(e is None for e in ns.spec)
+
+
+@pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+def test_rule_overrides_and_freed_axes():
+    """Overrides reroute logical axes; degradation frees axes for later dims
+    (the batch=1 long-context kv_seq context-parallel trick)."""
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    with with_rules(mesh, {"kv_seq": ("data",)}) as mr:
+        # batch=1 cannot take "data" (1 % 2 != 0); kv_seq picks it up
+        spec = _resolve((1, 1024, 4, 64), ("batch", "kv_seq", "kv_heads", None), mr)
+        assert spec == P(None, "data", "model", None)
+        # with a shardable batch, batch wins "data" and kv_seq degrades
+        spec = _resolve((4, 1024, 4, 64), ("batch", "kv_seq", "kv_heads", None), mr)
+        assert spec == P("data", None, "model", None)
 
 
 def test_axis_used_once(mesh):
