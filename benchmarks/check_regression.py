@@ -1,0 +1,143 @@
+"""CI benchmark-regression gate.
+
+``python -m benchmarks.check_regression [--sections a,b] [--tolerance 0.30]``
+
+Reads the JSON written by ``benchmarks.run --fast`` for each gated section,
+extracts a small set of higher-is-better metrics, and compares them against
+the committed baseline (``benchmarks/results/baseline_ci.json``). Any metric
+more than ``--tolerance`` (default 30%) below its baseline value fails the
+run with exit 1 — the CI tier1 job runs this after the benchmark smoke, so a
+change that quietly halves repair throughput cannot merge green.
+
+The gate prefers *ratio* metrics (batched-vs-looped speedup, pipelined-vs-
+sync speedup) over absolute throughput where possible: ratios compare two
+paths on the same silicon, so they transfer between the machine that seeded
+the baseline and whatever runner CI lands on. Aggregate absolute throughput
+is gated too (min across the sweep), since a uniform slowdown leaves ratios
+untouched.
+
+``--update-baseline`` rewrites the baseline from the current results (run it
+locally after an intentional perf change and commit the file).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results"
+BASELINE = RESULTS / "baseline_ci.json"
+DEFAULT_TOLERANCE = 0.30
+
+
+def _batched_repair(doc: dict) -> dict[str, float]:
+    rows = doc["rows"]
+    return {
+        "min_single_speedup_at_S32": doc["min_single_speedup_at_S32"],
+        "min_single_stripes_per_sec": min(
+            1e6 / r["single_batched_us_per_stripe"] for r in rows),
+        "min_multi_speedup": min(r["multi_speedup"] for r in rows),
+    }
+
+
+def _pipelined_repair(doc: dict) -> dict[str, float]:
+    rows = doc["rows"]
+    return {
+        "min_speedup_at_acceptance": doc["min_speedup_at_acceptance"],
+        "best_stripes_per_sec_pipe": max(
+            r["stripes_per_sec_pipe"] for r in rows),
+    }
+
+
+EXTRACTORS = {
+    "batched_repair": _batched_repair,
+    "pipelined_repair": _pipelined_repair,
+}
+
+
+def extract(section: str, results_dir: Path) -> dict[str, float]:
+    path = results_dir / f"{section}.json"
+    if not path.exists():
+        raise FileNotFoundError(
+            f"{path} missing — run `python -m benchmarks.run --fast "
+            f"--only {section}` first")
+    return EXTRACTORS[section](json.loads(path.read_text()))
+
+
+def check(current: dict[str, dict[str, float]],
+          baseline: dict, tolerance: float) -> list[str]:
+    """Returns a list of failure messages (empty = gate passes)."""
+    failures = []
+    for section, base_metrics in baseline["sections"].items():
+        cur = current.get(section)
+        if cur is None:
+            continue  # section not gated this run
+        for metric, base in base_metrics.items():
+            got = cur.get(metric)
+            if got is None:
+                failures.append(f"{section}/{metric}: missing from results")
+                continue
+            floor = base * (1.0 - tolerance)
+            status = "ok" if got >= floor else "REGRESSION"
+            print(f"{status:>10}  {section}/{metric}: {got:.3f} "
+                  f"(baseline {base:.3f}, floor {floor:.3f})")
+            if got < floor:
+                failures.append(
+                    f"{section}/{metric}: {got:.3f} < floor {floor:.3f} "
+                    f"({tolerance:.0%} below baseline {base:.3f})")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", type=Path, default=BASELINE)
+    ap.add_argument("--results", type=Path, default=RESULTS)
+    ap.add_argument("--sections", default=",".join(EXTRACTORS),
+                    metavar="SECTION[,SECTION...]")
+    ap.add_argument("--tolerance", type=float, default=None,
+                    help=f"allowed drop below baseline "
+                         f"(default: baseline file's, else {DEFAULT_TOLERANCE})")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from current results")
+    args = ap.parse_args(argv)
+    sections = [s.strip() for s in args.sections.split(",") if s.strip()]
+    unknown = [s for s in sections if s not in EXTRACTORS]
+    if unknown:
+        ap.error(f"no regression extractor for: {', '.join(unknown)} "
+                 f"(known: {', '.join(EXTRACTORS)})")
+    try:
+        current = {s: extract(s, args.results) for s in sections}
+    except FileNotFoundError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 1
+    if args.update_baseline:
+        doc = {"tolerance": (args.tolerance if args.tolerance is not None
+                             else DEFAULT_TOLERANCE),
+               "note": "seeded from a --fast run; regenerate with "
+                       "`python -m benchmarks.check_regression "
+                       "--update-baseline` after intentional perf changes",
+               "sections": current}
+        args.baseline.parent.mkdir(parents=True, exist_ok=True)
+        args.baseline.write_text(json.dumps(doc, indent=1) + "\n")
+        print(f"baseline written: {args.baseline}")
+        return 0
+    if not args.baseline.exists():
+        print(f"error: baseline {args.baseline} missing — seed it with "
+              f"--update-baseline and commit it", file=sys.stderr)
+        return 1
+    baseline = json.loads(args.baseline.read_text())
+    tolerance = (args.tolerance if args.tolerance is not None
+                 else baseline.get("tolerance", DEFAULT_TOLERANCE))
+    failures = check(current, baseline, tolerance)
+    if failures:
+        print("\nbenchmark regression gate FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("\nbenchmark regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

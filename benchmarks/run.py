@@ -11,34 +11,49 @@ Sections (paper analogue in brackets):
   filelevel         file-level degraded-read optimization   [Fig 10]
   batched_repair    batched vs per-stripe repair throughput [PR-1 tentpole]
   sharded_repair    repair throughput vs device count        [PR-2 tentpole]
+  pipelined_repair  async pipeline vs sync repair overlap    [PR-3 tentpole]
   kernels           encode kernels vs jnp reference          [§V substrate]
   ckpt_stripes      EC-checkpoint encode/repair per arch    [framework]
   roofline          dry-run roofline table                   [deliverable g]
 
 Each section prints ``name,us_per_call,derived`` CSV rows and writes JSON to
 benchmarks/results/.
+
+``--only`` accepts a comma-separated list; an unknown name exits 2 (so a
+typo'd CI step cannot silently run nothing), and any failed section makes
+the whole run exit 1 (the regression gate depends on that).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 from pathlib import Path
 
 RESULTS = Path(__file__).resolve().parent / "results"
 
 SECTIONS = ("repair_costs", "local_portion", "mttdl", "repair_time",
             "blocksize_sweep", "filelevel", "batched_repair",
-            "sharded_repair", "kernels", "ckpt_stripes", "roofline")
+            "sharded_repair", "pipelined_repair", "kernels", "ckpt_stripes",
+            "roofline")
 
 
-def main() -> None:
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None, choices=SECTIONS)
+    ap.add_argument("--only", default=None, metavar="SECTION[,SECTION...]",
+                    help=f"run only these sections; one of: {', '.join(SECTIONS)}")
     ap.add_argument("--fast", action="store_true",
                     help="narrow parameter subsets (CI mode)")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
     RESULTS.mkdir(parents=True, exist_ok=True)
-    todo = [args.only] if args.only else list(SECTIONS)
+    if args.only:
+        todo = [s.strip() for s in args.only.split(",") if s.strip()]
+        unknown = [s for s in todo if s not in SECTIONS]
+        if unknown:
+            ap.error(f"unknown benchmark section(s): {', '.join(unknown)} "
+                     f"(choose from {', '.join(SECTIONS)})")  # exits 2
+    else:
+        todo = list(SECTIONS)
     failures = []
     for name in todo:
         mod = __import__(f"benchmarks.{name}", fromlist=["run"])
@@ -53,7 +68,8 @@ def main() -> None:
             print(f"SECTION FAILED: {name}: {e}")
             traceback.print_exc()
     print(f"\nsections failed: {failures or 'none'}")
+    return 1 if failures else 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -23,6 +23,7 @@ launch per call via ``repro.dist.stripes`` — with bit-identical results;
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Iterable, Mapping, Optional, Union
 
 import jax
@@ -45,6 +46,10 @@ class BatchedCodecEngine:
     planner: RepairPlanner | None = None
     mesh_rules: MeshRules | None = None
     last_span: int = dataclasses.field(default=1, init=False)
+    # Wall-clock of the most recent execute() launch, device-synchronized
+    # (block_until_ready) so span accounting upstream sees real compute time
+    # rather than async-dispatch time.
+    last_exec_seconds: float = dataclasses.field(default=0.0, init=False)
 
     def __post_init__(self):
         require_backend(self.backend)
@@ -91,9 +96,13 @@ class BatchedCodecEngine:
                              f"plan reads {plan.reads}, got {stacked.shape}")
         mr = self._rules(mesh_rules)
         self.last_span = stripe_span(stacked.shape, mr)
-        return gf_matmul_batch_op(plan.coeffs, stacked,
-                                  backend=matmul_backend(self.backend),
-                                  mesh_rules=mr)
+        t0 = time.perf_counter()
+        out = gf_matmul_batch_op(plan.coeffs, stacked,
+                                 backend=matmul_backend(self.backend),
+                                 mesh_rules=mr)
+        jax.block_until_ready(out)
+        self.last_exec_seconds = time.perf_counter() - t0
+        return out
 
     def _execute(self, plan: CompiledPlan, available: Blocks,
                  mesh_rules: Optional[MeshRules] = None) -> jax.Array:

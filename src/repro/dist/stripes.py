@@ -50,6 +50,31 @@ def stripe_sharding(shape, mr: MeshRules) -> NamedSharding:
     return NamedSharding(mr.mesh, stripe_spec(shape, mr))
 
 
+def stripe_axis_span(mr: Optional[MeshRules]) -> int:
+    """Device count the "stripes" logical axis *can* claim on ``mr``'s mesh
+    (the product of its candidate axes present in the mesh), independent of
+    any particular batch size. 1 with no rules or no candidate axes."""
+    if mr is None:
+        return 1
+    sizes = dict(mr.mesh.shape)
+    span = 1
+    for ax in dict.fromkeys(mr.axes_for("stripes")):
+        span *= sizes.get(ax, 1)
+    return span
+
+
+def align_stripe_window(window: int, mr: Optional[MeshRules]) -> int:
+    """Largest window' <= ``window`` divisible by the stripe-axis device
+    span, so windowed launches keep their full device parallelism instead of
+    degrading to one device on an indivisible S. Windows smaller than the
+    span are returned unchanged (they degrade, matching ragged-tail
+    semantics elsewhere)."""
+    span = stripe_axis_span(mr)
+    if span <= 1 or window < span:
+        return window
+    return (window // span) * span
+
+
 def stripe_span(shape, mr: Optional[MeshRules]) -> int:
     """How many devices an ``(S, ...)`` batch spreads over (1 = degraded)."""
     if mr is None:

@@ -9,3 +9,4 @@ from .stripestore import NodeState, StripeStore, StoreConfig  # noqa: F401
 from .checkpoint import CheckpointManager  # noqa: F401
 from .failures import FailureInjector  # noqa: F401
 from .fleet import FleetRepairReport, repair_failed_nodes  # noqa: F401
+from .pipeline import PipelineResult, RepairPipeline  # noqa: F401

@@ -12,6 +12,7 @@ wide-stripe generation cost that StripeMerge-style systems optimize).
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import numpy as np
 
@@ -30,12 +31,16 @@ class FailureEvent:
 
 class FailureInjector:
     def __init__(self, store: StripeStore, mttf_hours: float = 1000.0,
-                 seed: int = 0):
+                 seed: int = 0, pipeline: Optional[bool] = None):
         self.store = store
         self.mttf_hours = mttf_hours
         self.rng = np.random.default_rng(seed)
         self.events: list[FailureEvent] = []
         self.clock = 0.0
+        # None: the store's default (pipelined when cfg.pipeline_window > 0);
+        # simulated repair *time* is identical either way — the pipeline
+        # changes wall-clock, not the bandwidth model.
+        self.pipeline = pipeline
 
     def run(self, hours: float, repair_immediately: bool = True) -> list[FailureEvent]:
         """Simulate ``hours`` of operation; each failure repairs onto the
@@ -51,7 +56,7 @@ class FailureInjector:
             node = int(self.rng.integers(n))
             self.store.fail_node(node)
             if repair_immediately:
-                tele = self.store.repair_all()
+                tele = self.store.repair_all(pipeline=self.pipeline)
                 self.store.revive_node(node)
                 self.events.append(FailureEvent(
                     t=t, node=node,

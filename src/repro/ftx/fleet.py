@@ -103,33 +103,57 @@ class FleetRepairReport:
     plan_cache: dict            # planner hit/miss/eviction counters
     devices: int = 1            # widest device span of any launch
     device_launches: int = 0    # per-device kernel executions, all launches
+    # Async-pipeline observability (repro.ftx.pipeline): per-stage wall
+    # spans plus how much of them the double buffer hid. Zero on the
+    # synchronous paths except the stage spans, which are accounted there
+    # too (serially, so overlap_seconds stays 0).
+    pipelined: bool = False
+    windows: int = 0            # pipeline windows executed
+    replans: int = 0            # windows re-planned after mid-repair failures
+    read_seconds: float = 0.0
+    compute_seconds: float = 0.0
+    write_seconds: float = 0.0
+    overlap_seconds: float = 0.0
 
     @property
     def stripes_per_launch(self) -> float:
         return self.stripes_repaired / max(1, self.launches)
+
+    @property
+    def overlap_ratio(self) -> float:
+        """Fraction of stage time hidden by pipelining (0 = fully serial)."""
+        busy = self.read_seconds + self.compute_seconds + self.write_seconds
+        return self.overlap_seconds / busy if busy > 0 else 0.0
 
 
 def repair_failed_nodes(store, nodes: Iterable[int], *,
                         spare_of: Optional[dict[int, int]] = None,
                         revive: bool = True,
                         batched: bool = True,
-                        mesh_rules=None) -> FleetRepairReport:
+                        mesh_rules=None,
+                        pipeline: Optional[bool] = None,
+                        window: Optional[int] = None) -> FleetRepairReport:
     """Fail ``nodes`` and rebuild every affected stripe in the store.
 
     All stripes whose blocks lived on the failed nodes are grouped by
     failure pattern and repaired through the store's batched engine — one
-    launch per (pattern, chunk). ``mesh_rules`` (or an ambient
-    ``with_rules`` context) device-shards each launch's stripe axis; the
-    report's ``devices``/``device_launches`` fields record the resulting
-    per-device launch counts. ``revive`` marks the nodes UP again after
-    the rebuild (blocks were re-materialized in place or onto spares).
+    launch per (pattern, chunk). ``pipeline`` (default: on when
+    ``cfg.pipeline_window > 0``) overlaps each window's disk reads, device
+    launch and write-back through the async pipeline; the report's
+    ``read/compute/write_seconds`` and ``overlap_seconds`` fields make the
+    overlap observable. ``mesh_rules`` (or an ambient ``with_rules``
+    context) device-shards each launch's stripe axis; the report's
+    ``devices``/``device_launches`` fields record the resulting per-device
+    launch counts. ``revive`` marks the nodes UP again after the rebuild
+    (blocks were re-materialized in place or onto spares).
     """
     nodes = tuple(nodes)
     for node in nodes:
         store.fail_node(node)
     before = store.codec.planner.stats.snapshot()
     tele = store.repair_all(spare_of=spare_of, batched=batched,
-                            mesh_rules=mesh_rules)
+                            mesh_rules=mesh_rules, pipeline=pipeline,
+                            window=window)
     after = store.codec.planner.stats.snapshot()
     if revive:
         for node in nodes:
@@ -148,4 +172,11 @@ def repair_failed_nodes(store, nodes: Iterable[int], *,
         repairs_local=tele["repairs_local"],
         repairs_global=tele["repairs_global"],
         plan_cache={k: after[k] - before[k] for k in after},
+        pipelined=tele.get("pipelined", False),
+        windows=tele.get("windows", 0),
+        replans=tele.get("replans", 0),
+        read_seconds=tele.get("read_seconds", 0.0),
+        compute_seconds=tele.get("compute_seconds", 0.0),
+        write_seconds=tele.get("write_seconds", 0.0),
+        overlap_seconds=tele.get("overlap_seconds", 0.0),
     )

@@ -1,0 +1,273 @@
+"""Double-buffered async repair pipeline (DESIGN.md §7).
+
+The batched engine made repair compute-efficient — one compiled plan and one
+kernel launch per failure-pattern chunk — but ``StripeStore.repair_all``
+remained *serial*: gather every surviving block for a chunk on the host,
+then launch, then write back, leaving the device idle during I/O and the
+disks idle during compute. The paper's repair wins are bandwidth-bound
+(§VI; XORing Elephants makes the same point for HDFS), so the read path is
+the wall-clock floor and the compute should hide behind it.
+
+This module overlaps the three stages with a classic double buffer over
+*stripe windows*:
+
+* each failure-pattern group is split into windows of
+  ``StoreConfig.pipeline_window`` stripes (capped by ``batch_stripes`` and
+  the gathered-stack byte budget, and rounded to the mesh's stripe-axis
+  device span so sharded launches keep their full parallelism);
+* window *i+1*'s surviving blocks prefetch through a reader thread pool
+  (every read goes through ``StripeStore._read_block`` — node liveness and
+  the simulated per-node latency/bandwidth model apply unchanged) while
+  window *i* runs through ``BatchedCodecEngine.execute`` (including the
+  sharded ``MeshRules`` path);
+* write-back of window *i*'s rebuilt blocks happens on a dedicated writer
+  thread, overlapped with the launch of window *i+1*.
+
+Failure injection mid-pipeline is first-class: a node that dies between
+prefetch and launch surfaces as ``IOError`` on the affected read futures,
+and the window *re-plans* — fresh ``_down_blocks`` per stripe, fresh
+compiled plans for the (now larger) patterns — until it drains or the
+pattern is genuinely unrecoverable. Results are bit-identical to the
+synchronous path by construction: GF(2^8) decoding is exact, so windowing,
+thread scheduling and re-planning change wall-clock only, never bytes.
+
+Every stage records wall spans; :class:`PipelineResult` aggregates them so
+overlap is *observable*: ``read+compute+write > wall`` is the pipeline
+working, and ``overlap_seconds`` quantifies it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor, wait
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.dist.stripes import align_stripe_window
+
+# A hook receives (stage, window_index) at: "prefetch" (reads submitted),
+# "launch" (about to execute), "writeback" (write submitted), "replan"
+# (window re-planning after mid-pipeline failures). Tests use it to inject
+# node failures at precise pipeline points.
+PipelineHook = Callable[[str, int], None]
+
+
+@dataclasses.dataclass(frozen=True)
+class RepairWindow:
+    """One pipeline unit: a slice of stripes sharing a failure pattern."""
+    index: int
+    sids: tuple[int, ...]
+    down: frozenset[int]
+    compiled: object                       # CompiledPlan
+
+
+@dataclasses.dataclass
+class _Fetch:
+    """An in-flight window prefetch: futures filling a preallocated stack."""
+    window: RepairWindow
+    stacked: np.ndarray                    # (S, |reads|, B), filled by futures
+    futures: list[Future]
+    t_submit: float
+
+
+@dataclasses.dataclass
+class PipelineResult:
+    """Aggregate spans + launch accounting for one pipeline run."""
+    windows: int = 0
+    launches: int = 0
+    devices: int = 1
+    device_launches: int = 0
+    replans: int = 0
+    read_seconds: float = 0.0              # sum of per-window prefetch spans
+    compute_seconds: float = 0.0           # sum of launch (+ host copy) spans
+    write_seconds: float = 0.0             # sum of write-back spans
+    wall_seconds: float = 0.0
+    spans: list = dataclasses.field(default_factory=list)  # (stage, win, t0, t1)
+
+    @property
+    def busy_seconds(self) -> float:
+        return self.read_seconds + self.compute_seconds + self.write_seconds
+
+    @property
+    def overlap_seconds(self) -> float:
+        """Stage time hidden by pipelining (0 for a fully serial run)."""
+        return max(0.0, self.busy_seconds - self.wall_seconds)
+
+
+class RepairPipeline:
+    """Drives windowed, double-buffered repair against one ``StripeStore``.
+
+    One instance serves one ``repair_all`` call; the reader pool and writer
+    thread live only for the duration of :meth:`run`.
+    """
+
+    def __init__(self, store, *, spare_of: Optional[dict[int, int]] = None,
+                 mesh_rules=None, window: Optional[int] = None,
+                 threads: Optional[int] = None,
+                 byte_budget: Optional[int] = None,
+                 hook: Optional[PipelineHook] = None):
+        self.store = store
+        self.spare_of = spare_of
+        self.mesh_rules = mesh_rules
+        cfg = store.cfg
+        self.window = int(window or cfg.pipeline_window or cfg.batch_stripes)
+        self.threads = max(1, int(threads or cfg.prefetch_threads))
+        self.byte_budget = byte_budget
+        self.hook = hook or (lambda stage, index: None)
+        self._span_lock = threading.Lock()
+
+    # ------------------------------------------------------------- windows
+    def _windows(self, work: Sequence[tuple[list[int], frozenset[int], object]]
+                 ) -> list[RepairWindow]:
+        from .stripestore import launch_step
+
+        cfg = self.store.cfg
+        out: list[RepairWindow] = []
+        for sids, down, compiled in work:
+            step = launch_step(cfg, len(compiled.reads), self.window,
+                               **({} if self.byte_budget is None
+                                  else {"byte_budget": self.byte_budget}))
+            step = align_stripe_window(step, self.mesh_rules)
+            for lo in range(0, len(sids), step):
+                out.append(RepairWindow(len(out), tuple(sids[lo:lo + step]),
+                                        down, compiled))
+        return out
+
+    # ------------------------------------------------------------- stages
+    def _fill(self, stacked: np.ndarray, i: int, j: int, sid: int, b: int
+              ) -> None:
+        stacked[i, j] = self.store._read_block(sid, b)
+
+    def _prefetch(self, pool: ThreadPoolExecutor, win: RepairWindow) -> _Fetch:
+        stacked = np.empty((len(win.sids), len(win.compiled.reads),
+                            self.store.cfg.block_size), np.uint8)
+        t0 = time.perf_counter()
+        futures = [pool.submit(self._fill, stacked, i, j, sid, b)
+                   for i, sid in enumerate(win.sids)
+                   for j, b in enumerate(win.compiled.reads)]
+        return _Fetch(win, stacked, futures, t0)
+
+    def _collect(self, fetch: _Fetch, res: PipelineResult
+                 ) -> Optional[np.ndarray]:
+        """Wait out a prefetch. Returns the stack, or None when node deaths
+        invalidated it (the window must re-plan). Non-I/O errors raise."""
+        wait(fetch.futures)
+        t1 = time.perf_counter()
+        self._span(res, "read", fetch.window.index, fetch.t_submit, t1)
+        io_failed = False
+        for f in fetch.futures:
+            err = f.exception()
+            if err is None:
+                continue
+            if isinstance(err, IOError):
+                io_failed = True
+            else:
+                raise err
+        return None if io_failed else fetch.stacked
+
+    def _launch(self, win: RepairWindow, stacked: np.ndarray,
+                res: PipelineResult) -> dict[int, np.ndarray]:
+        engine = self.store.engine
+        t0 = time.perf_counter()
+        out = np.asarray(engine.execute(win.compiled, stacked,
+                                        self.mesh_rules))
+        t1 = time.perf_counter()
+        self._span(res, "compute", win.index, t0, t1)
+        res.launches += 1
+        res.devices = max(res.devices, engine.last_span)
+        res.device_launches += engine.last_span
+        return {b: out[:, t, :] for t, b in enumerate(win.compiled.targets)}
+
+    def _writeback(self, win: RepairWindow, rebuilt: dict[int, np.ndarray],
+                   res: PipelineResult) -> None:
+        t0 = time.perf_counter()
+        self.store._finish_repair(list(win.sids), win.down, win.compiled.meta,
+                                  rebuilt, self.spare_of)
+        t1 = time.perf_counter()
+        self._span(res, "write", win.index, t0, t1)
+
+    def _span(self, res: PipelineResult, stage: str, index: int,
+              t0: float, t1: float) -> None:
+        with self._span_lock:
+            res.spans.append((stage, index, t0, t1))
+            setattr(res, f"{stage}_seconds",
+                    getattr(res, f"{stage}_seconds") + (t1 - t0))
+
+    # ------------------------------------------------------------- replan
+    def _replan(self, pool: ThreadPoolExecutor, win: RepairWindow,
+                res: PipelineResult) -> None:
+        """Slow path: nodes died under this window's prefetch. Regroup its
+        stripes by their *current* down sets, compile fresh plans, and
+        repair synchronously (reads still fan out over the pool). Loops
+        while further failures land; every retry consumes a new failure, so
+        the node count bounds the iterations."""
+        store = self.store
+        pending = list(win.sids)
+        for _ in range(1 + len(store.nodes)):
+            if not pending:
+                return
+            res.replans += 1
+            self.hook("replan", win.index)
+            retry: list[int] = []
+            groups: dict[frozenset[int], list[int]] = {}
+            for sid in pending:
+                groups.setdefault(store._down_blocks(sid), []).append(sid)
+            for down, sids in sorted(groups.items(), key=lambda kv: kv[1][0]):
+                try:
+                    compiled = store.engine.planner.multi_plan(down)
+                except RuntimeError:
+                    raise IOError(f"stripes {sids} unrecoverable: "
+                                  f"{sorted(down)}") from None
+                sub = RepairWindow(win.index, tuple(sids), down, compiled)
+                stacked = self._collect(self._prefetch(pool, sub), res)
+                if stacked is None:          # yet another failure; go again
+                    retry.extend(sids)
+                    continue
+                self._writeback(sub, self._launch(sub, stacked, res), res)
+            pending = retry
+        raise IOError(f"stripes {pending}: nodes kept failing during re-plan")
+
+    # ---------------------------------------------------------------- run
+    def run(self, work: Sequence[tuple[list[int], frozenset[int], object]]
+            ) -> PipelineResult:
+        """Repair ``[(sids, down, compiled), ...]`` pattern groups.
+
+        The double buffer: wait on window *i*'s prefetch, immediately
+        submit window *i+1*'s, then launch *i* and hand its write-back to
+        the writer thread — so at steady state reads, compute and writes
+        for three consecutive windows run concurrently.
+        """
+        res = PipelineResult()
+        windows = self._windows(work)
+        res.windows = len(windows)
+        if not windows:
+            return res
+        t_run = time.perf_counter()
+        with ThreadPoolExecutor(self.threads,
+                                thread_name_prefix="repair-read") as readers, \
+                ThreadPoolExecutor(1, thread_name_prefix="repair-write") as writer:
+            writes: list[Future] = []
+            cur = self._prefetch(readers, windows[0])
+            self.hook("prefetch", 0)
+            for i, win in enumerate(windows):
+                nxt = None
+                if i + 1 < len(windows):
+                    nxt = self._prefetch(readers, windows[i + 1])
+                    self.hook("prefetch", i + 1)
+                stacked = self._collect(cur, res)
+                self.hook("launch", i)
+                if stacked is None:
+                    self._replan(readers, win, res)
+                else:
+                    rebuilt = self._launch(win, stacked, res)
+                    writes.append(writer.submit(self._writeback, win,
+                                                rebuilt, res))
+                    self.hook("writeback", i)
+                cur = nxt
+            wait(writes)
+            for f in writes:
+                f.result()                   # surface writer-thread errors
+        res.wall_seconds = time.perf_counter() - t_run
+        return res

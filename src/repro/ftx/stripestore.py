@@ -18,6 +18,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import json
+import threading
 import time
 from pathlib import Path
 from typing import Iterable, Optional
@@ -40,6 +41,18 @@ class NodeState(enum.Enum):
 _BATCH_BYTE_BUDGET = 256 << 20
 
 
+def launch_step(cfg: "StoreConfig", num_reads: int,
+                window: Optional[int] = None,
+                byte_budget: int = _BATCH_BYTE_BUDGET) -> int:
+    """Stripes per batched launch: the requested ``window`` (default
+    ``cfg.batch_stripes``) capped by ``batch_stripes`` and the gathered-
+    stack byte budget. Shared by the synchronous chunk loop and the async
+    pipeline so both paths always chunk identically."""
+    per_stripe = num_reads * cfg.block_size
+    return max(1, min(window or cfg.batch_stripes, cfg.batch_stripes,
+                      byte_budget // max(1, per_stripe)))
+
+
 @dataclasses.dataclass(frozen=True)
 class StoreConfig:
     scheme: str = "cp-azure"
@@ -52,6 +65,12 @@ class StoreConfig:
     hedge: int = 0                     # extra sources for hedged reads
     seed: int = 0
     batch_stripes: int = 64            # max stripes per batched repair launch
+    pipeline_window: int = 32          # stripes per async-repair window (0 = sync)
+    prefetch_threads: int = 8          # reader pool width for the pipeline
+    io_stall_scale: float = 0.0        # fraction of each read's *simulated*
+    #                                    time actually slept (wall-clock),
+    #                                    making the per-node latency model
+    #                                    real for overlap experiments
 
 
 @dataclasses.dataclass
@@ -76,12 +95,19 @@ class Telemetry:
     repairs_local: int = 0
     repairs_global: int = 0
     sim_seconds: float = 0.0
+    # Wall-clock stage spans of repair work (read gather / device compute /
+    # write-back). Under the pipeline these overlap, so their sum exceeding
+    # the repair's wall time is the overlap being won.
+    read_seconds: float = 0.0
+    compute_seconds: float = 0.0
+    write_seconds: float = 0.0
 
     def reset(self) -> "Telemetry":
         snap = dataclasses.replace(self)
         self.blocks_read = self.bytes_read = 0
         self.repairs_local = self.repairs_global = 0
         self.sim_seconds = 0.0
+        self.read_seconds = self.compute_seconds = self.write_seconds = 0.0
         return snap
 
 
@@ -104,6 +130,10 @@ class StripeStore:
         self.latency_ms = {
             i: float(l) for i, l in enumerate(
                 np.random.default_rng(cfg.seed).gamma(2.0, 5.0, self.num_nodes))}
+        # Pipeline prefetch threads and the write-back thread mutate
+        # telemetry concurrently with the coordinator; counters stay exact
+        # under this lock.
+        self._tele_lock = threading.Lock()
         self.stripes: dict[int, Stripe] = {}
         self.objects: dict[str, ObjectMeta] = {}
         self.telemetry = Telemetry()
@@ -125,11 +155,17 @@ class StripeStore:
             raise IOError(f"node {node} is down")
         data = np.fromfile(self._block_path(sid, block), dtype=np.uint8)
         lo, hi = rng if rng else (0, len(data))
-        self.telemetry.blocks_read += 1
-        self.telemetry.bytes_read += hi - lo
-        self.telemetry.sim_seconds += (
-            (hi - lo) * 8 / (self.cfg.bandwidth_gbps * 1e9)
-            + self.latency_ms[node] / 1e3)
+        dt = ((hi - lo) * 8 / (self.cfg.bandwidth_gbps * 1e9)
+              + self.latency_ms[node] / 1e3)
+        if self.cfg.io_stall_scale > 0.0:
+            # Make the simulated link model wall-real (scaled): serial
+            # readers pay it in full, the pipeline's prefetch pool overlaps
+            # it with compute — exactly the effect under measurement.
+            time.sleep(self.cfg.io_stall_scale * dt)
+        with self._tele_lock:
+            self.telemetry.blocks_read += 1
+            self.telemetry.bytes_read += hi - lo
+            self.telemetry.sim_seconds += dt
         return data[lo:hi]
 
     def _write_block(self, sid: int, block: int, data: np.ndarray) -> None:
@@ -290,7 +326,10 @@ class StripeStore:
         self.nodes[node] = NodeState.UP
 
     def repair_all(self, spare_of: Optional[dict[int, int]] = None, *,
-                   batched: bool = True, mesh_rules=None) -> dict:
+                   batched: bool = True, mesh_rules=None,
+                   pipeline: Optional[bool] = None,
+                   window: Optional[int] = None,
+                   pipeline_hook=None) -> dict:
         """Rebuild every block resident on DOWN nodes onto spares (or back in
         place) using the multi-node planner. Returns telemetry for the repair
         (the paper's repair-time experiments).
@@ -302,15 +341,29 @@ class StripeStore:
         stripe. ``batched=False`` keeps the seed per-stripe loop (benchmark
         baseline). Results are bit-identical between the two paths.
 
+        ``pipeline`` routes the batched path through the double-buffered
+        async pipeline (``repro.ftx.pipeline``): pattern chunks split into
+        ``cfg.pipeline_window``-stripe windows (``window`` overrides) whose
+        disk reads, device launches and write-backs overlap. ``None``
+        defaults to pipelining whenever ``cfg.pipeline_window > 0``;
+        ``False`` is the synchronous fallback. Bit-identical either way.
+        ``pipeline_hook`` is a diagnostic callback ``(stage, window_index)``
+        (see ``repro.ftx.pipeline.PipelineHook``) used by the failure-
+        injection tests.
+
         ``mesh_rules`` (or an ambient ``with_rules`` context) shards each
         launch's stripe axis over the mesh's data axes: one device-parallel
         launch per pattern chunk. Telemetry reports ``devices`` (widest
         device span seen) and ``device_launches`` (total per-device kernel
-        executions across all launches).
+        executions across all launches). ``read/compute/write_seconds``
+        report per-stage wall spans; ``overlap_seconds`` is the stage time
+        the pipeline hid (0 on the synchronous paths).
         """
         from repro.dist.sharding import current_rules
 
         mr = mesh_rules if mesh_rules is not None else current_rules()
+        use_pipeline = batched and (pipeline if pipeline is not None
+                                    else self.cfg.pipeline_window > 0)
         before = dataclasses.replace(self.telemetry)
         t0 = time.perf_counter()
         affected: dict[frozenset[int], list[int]] = {}
@@ -321,27 +374,15 @@ class StripeStore:
         launches = 0
         devices = 1
         device_launches = 0
+        windows = 0
+        replans = 0
+        # Planning stops at the first unrecoverable pattern, but groups
+        # sorted before it still repair (matching the seed's loop order):
+        # a mixed-failure fleet rebuilds everything it can before raising.
+        unrecoverable: Optional[IOError] = None
+        work: list[tuple[list[int], frozenset[int], object]] = []
         for down, sids in sorted(affected.items(), key=lambda kv: kv[1][0]):
-            if batched:
-                try:
-                    compiled = self.engine.planner.multi_plan(down)
-                except RuntimeError:
-                    raise IOError(
-                        f"stripes {sids} unrecoverable: {sorted(down)}"
-                    ) from None
-                # Chunk by stripe count AND gathered-stack bytes, so wide
-                # read sets at large block sizes stay within a bounded
-                # host-memory transient.
-                per_stripe = len(compiled.reads) * self.cfg.block_size
-                step = max(1, min(self.cfg.batch_stripes,
-                                  _BATCH_BYTE_BUDGET // max(1, per_stripe)))
-                for lo in range(0, len(sids), step):
-                    span = self._repair_group(sids[lo:lo + step], down,
-                                              compiled, spare_of, mr)
-                    launches += 1
-                    devices = max(devices, span)
-                    device_launches += span
-            else:
+            if not batched:
                 for sid in sids:
                     plan = multi_repair_plan(self.scheme, down)
                     if not plan.feasible:
@@ -352,7 +393,49 @@ class StripeStore:
                                         spare_of)
                     launches += 1
                     device_launches += 1
+                continue
+            try:
+                compiled = self.engine.planner.multi_plan(down)
+            except RuntimeError:
+                unrecoverable = IOError(
+                    f"stripes {sids} unrecoverable: {sorted(down)}")
+                break
+            work.append((sids, down, compiled))
+        if use_pipeline and work:
+            from .pipeline import RepairPipeline
+
+            res = RepairPipeline(
+                self, spare_of=spare_of, mesh_rules=mr, window=window,
+                byte_budget=_BATCH_BYTE_BUDGET, hook=pipeline_hook,
+            ).run(work)
+            launches += res.launches
+            devices = max(devices, res.devices)
+            device_launches += res.device_launches
+            windows = res.windows
+            replans = res.replans
+            with self._tele_lock:
+                self.telemetry.read_seconds += res.read_seconds
+                self.telemetry.compute_seconds += res.compute_seconds
+                self.telemetry.write_seconds += res.write_seconds
+        else:
+            for sids, down, compiled in work:
+                # Chunk by stripe count AND gathered-stack bytes, so wide
+                # read sets at large block sizes stay within a bounded
+                # host-memory transient.
+                step = launch_step(self.cfg, len(compiled.reads), window)
+                for lo in range(0, len(sids), step):
+                    span = self._repair_group(sids[lo:lo + step], down,
+                                              compiled, spare_of, mr)
+                    launches += 1
+                    devices = max(devices, span)
+                    device_launches += span
+        if unrecoverable is not None:
+            raise unrecoverable
         t = dataclasses.replace(self.telemetry)
+        wall = time.perf_counter() - t0
+        stage_sum = ((t.read_seconds - before.read_seconds)
+                     + (t.compute_seconds - before.compute_seconds)
+                     + (t.write_seconds - before.write_seconds))
         return {
             "stripes_repaired": sum(len(sids) for sids in affected.values()),
             "patterns": len(affected),
@@ -360,10 +443,17 @@ class StripeStore:
             "devices": devices,
             "device_launches": device_launches,
             "batched": batched,
+            "pipelined": bool(use_pipeline and work),
+            "windows": windows,
+            "replans": replans,
             "blocks_read": t.blocks_read - before.blocks_read,
             "bytes_read": t.bytes_read - before.bytes_read,
             "sim_seconds": t.sim_seconds - before.sim_seconds,
-            "wall_seconds": time.perf_counter() - t0,
+            "wall_seconds": wall,
+            "read_seconds": t.read_seconds - before.read_seconds,
+            "compute_seconds": t.compute_seconds - before.compute_seconds,
+            "write_seconds": t.write_seconds - before.write_seconds,
+            "overlap_seconds": max(0.0, stage_sum - wall),
             "repairs_local": t.repairs_local - before.repairs_local,
             "repairs_global": t.repairs_global - before.repairs_global,
         }
@@ -374,25 +464,40 @@ class StripeStore:
         """Batched repair of stripes sharing one failure pattern: fill ONE
         preallocated (S, |reads|, B) stack straight from disk and run a
         single launch (device-parallel under ``mesh_rules``; no per-block
-        intermediate copies). Returns the device span of the launch."""
+        intermediate copies). Stages run strictly serial here — the span
+        accounting makes that visible next to the pipelined path. Returns
+        the device span of the launch."""
         stacked = np.empty((len(sids), len(compiled.reads),
                             self.cfg.block_size), np.uint8)
+        t0 = time.perf_counter()
         for i, sid in enumerate(sids):
             for j, b in enumerate(compiled.reads):
                 stacked[i, j] = self._read_block(sid, b)
+        t1 = time.perf_counter()
         out = np.asarray(self.engine.execute(compiled, stacked, mesh_rules))
         rebuilt = {b: out[:, t, :] for t, b in enumerate(compiled.targets)}
+        t2 = time.perf_counter()
         self._finish_repair(sids, down, compiled.meta, rebuilt, spare_of)
+        t3 = time.perf_counter()
+        with self._tele_lock:
+            self.telemetry.read_seconds += t1 - t0
+            self.telemetry.compute_seconds += t2 - t1
+            self.telemetry.write_seconds += t3 - t2
         return self.engine.last_span
 
     def _finish_repair(self, sids: list[int], down: frozenset[int], plan,
                        rebuilt: dict[int, np.ndarray],
                        spare_of: Optional[dict[int, int]]) -> None:
-        """Account telemetry and persist rebuilt (S, B) blocks per stripe."""
-        if plan.all_local:
-            self.telemetry.repairs_local += len(sids)
-        else:
-            self.telemetry.repairs_global += len(sids)
+        """Account telemetry and persist rebuilt (S, B) blocks per stripe.
+
+        Thread-safe against concurrent prefetch reads: the pipeline calls
+        this from its writer thread while reader threads bump the read
+        counters."""
+        with self._tele_lock:
+            if plan.all_local:
+                self.telemetry.repairs_local += len(sids)
+            else:
+                self.telemetry.repairs_global += len(sids)
         for i, sid in enumerate(sids):
             st = self.stripes[sid]
             for b, data in rebuilt.items():

@@ -1,0 +1,299 @@
+"""Async pipelined repair: bit-identity with the synchronous path, overlap
+telemetry, mid-pipeline failure injection, and the benchmark/CI plumbing
+that gates it.
+
+The 1-device cases always run; the sharded-pipeline case runs in the
+forced-8-device CI leg (``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+"""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from _prop import given, settings, st
+from repro.ftx import (FailureInjector, StoreConfig, StripeStore,
+                       repair_failed_nodes)
+
+REPO = Path(__file__).resolve().parent.parent
+
+multidevice = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+def _build(root, *, stripes=40, block_size=512, batch_stripes=8, window=4,
+           threads=4, **kw):
+    cfg = StoreConfig(scheme="cp-azure", k=6, r=2, p=2,
+                      block_size=block_size, batch_stripes=batch_stripes,
+                      pipeline_window=window, prefetch_threads=threads, **kw)
+    store = StripeStore(root, cfg)
+    payload = np.random.default_rng(3).integers(
+        0, 256, stripes * cfg.k * block_size, dtype=np.uint8)
+    store.put("blob", payload.tobytes())
+    store.seal()
+    assert len(store.stripes) == stripes
+    return store
+
+
+def _all_blocks(store):
+    return {(sid, b): store._block_path(sid, b).read_bytes()
+            for sid in store.stripes for b in range(store.scheme.n)}
+
+
+# ------------------------------------------------------------ bit-identity
+def test_pipelined_bit_identical_single_node(tmp_path):
+    sa = _build(tmp_path / "a")
+    sb = _build(tmp_path / "b")
+    node = sa.stripes[0].node_of_block[0]
+    rep = repair_failed_nodes(sa, [node], pipeline=True)
+    rep_b = repair_failed_nodes(sb, [node], pipeline=False)
+    assert rep.pipelined and not rep_b.pipelined
+    assert rep.windows > 1 and rep_b.windows == 0
+    assert rep.stripes_repaired == rep_b.stripes_repaired > 0
+    # same disk traffic and identical simulated (bandwidth-model) time: the
+    # pipeline changes wall-clock only
+    assert rep.blocks_read == rep_b.blocks_read
+    assert rep.sim_seconds == pytest.approx(rep_b.sim_seconds)
+    assert rep.repairs_local == rep_b.repairs_local
+    assert _all_blocks(sa) == _all_blocks(sb)
+
+
+def test_pipelined_bit_identical_multi_node(tmp_path):
+    sa = _build(tmp_path / "a")
+    sb = _build(tmp_path / "b")
+    n0 = sa.stripes[0].node_of_block[0]
+    n1 = sa.stripes[0].node_of_block[sa.scheme.k]   # a local parity's node
+    rep = repair_failed_nodes(sa, [n0, n1], pipeline=True)
+    rep_b = repair_failed_nodes(sb, [n0, n1], pipeline=False)
+    assert rep.stripes_repaired == rep_b.stripes_repaired > 0
+    assert rep.blocks_read == rep_b.blocks_read
+    assert _all_blocks(sa) == _all_blocks(sb)
+
+
+def test_pipeline_ragged_windows_and_window_override(tmp_path):
+    """A window size that doesn't divide the pattern groups leaves ragged
+    tail windows; bytes must not care."""
+    sa = _build(tmp_path / "a", stripes=30, window=3)
+    sb = _build(tmp_path / "b", stripes=30)
+    node = sa.stripes[0].node_of_block[2]
+    sa.fail_node(node)
+    tele = sa.repair_all(window=3)
+    sa.revive_node(node)
+    assert tele["pipelined"] and tele["windows"] >= len(sa.stripes) // 3 - 1
+    sb.fail_node(node)
+    sb.repair_all(pipeline=False)
+    sb.revive_node(node)
+    assert _all_blocks(sa) == _all_blocks(sb)
+
+
+# ------------------------------------------------------------- telemetry
+def test_pipeline_span_telemetry_observable(tmp_path):
+    store = _build(tmp_path / "s", io_stall_scale=0.02)
+    node = store.stripes[0].node_of_block[0]
+    rep = repair_failed_nodes(store, [node], pipeline=True)
+    assert rep.pipelined
+    assert rep.read_seconds > 0
+    assert rep.compute_seconds > 0
+    assert rep.write_seconds >= 0
+    assert rep.overlap_seconds >= 0
+    assert 0.0 <= rep.overlap_ratio <= 1.0
+    assert store.engine.last_exec_seconds > 0
+    # sync path accounts the same spans, serially (overlap telemetry ~0)
+    rep_b = repair_failed_nodes(store, [node], pipeline=False)
+    assert rep_b.read_seconds > 0 and rep_b.compute_seconds > 0
+    assert rep_b.windows == 0 and rep_b.replans == 0
+
+
+def test_sync_fallback_config_knob(tmp_path):
+    """pipeline_window=0 in the config disables pipelining by default;
+    an explicit pipeline=True still opts in."""
+    store = _build(tmp_path / "s", window=0)
+    node = store.stripes[0].node_of_block[0]
+    store.fail_node(node)
+    tele = store.repair_all()
+    assert not tele["pipelined"]
+    tele = store.repair_all(pipeline=True)
+    assert tele["pipelined"]
+    store.revive_node(node)
+
+
+def test_pipelined_unrecoverable_raises_ioerror(tmp_path):
+    store = _build(tmp_path / "s", stripes=10)
+    for b in range(5):                      # beyond p+r: never decodable
+        store.fail_node(store.stripes[0].node_of_block[b])
+    with pytest.raises(IOError):
+        store.repair_all(pipeline=True)
+
+
+def test_partial_repair_before_unrecoverable_pattern(tmp_path):
+    """Mixed failures: pattern groups sorted before the first unrecoverable
+    one still repair (on both paths, identically) before the IOError."""
+    def build(root):
+        cfg = StoreConfig(scheme="cp-azure", k=6, r=2, p=2, block_size=512,
+                          batch_stripes=8, pipeline_window=4)
+        store = StripeStore(root, cfg, num_nodes=20)
+        payload = np.random.default_rng(3).integers(
+            0, 256, 8 * cfg.k * cfg.block_size, dtype=np.uint8)
+        store.put("blob", payload.tobytes())
+        store.seal()
+        return store
+
+    sa, sb = build(tmp_path / "a"), build(tmp_path / "b")
+    # Nodes 9-13 hold 5 blocks of stripe 1 (unrecoverable, n-k=4), but only
+    # one block of stripe 0 — whose group sorts first and must repair.
+    for store, pipe in ((sa, True), (sb, False)):
+        assert len(store._down_blocks(1) | {0}) <= 1  # sanity: all up
+        for node in range(9, 14):
+            store.fail_node(node)
+        assert len(store._down_blocks(1)) == 5
+        assert len(store._down_blocks(0)) == 1
+        with pytest.raises(IOError):
+            store.repair_all(pipeline=pipe)
+        repaired = store.telemetry.repairs_local + store.telemetry.repairs_global
+        assert repaired == 1, "the feasible group sorted first must repair"
+    assert _all_blocks(sa) == _all_blocks(sb)
+
+
+def test_failure_injector_pipeline_knob(tmp_path):
+    store = _build(tmp_path / "s", stripes=10)
+    inj = FailureInjector(store, mttf_hours=2.0, seed=1, pipeline=True)
+    events = inj.run(hours=1.0)
+    assert events                            # rate makes >=1 overwhelmingly likely
+    blob = store.get("blob")
+    assert blob.size == 10 * store.cfg.k * store.cfg.block_size
+
+
+# ------------------------------------------------- mid-pipeline failures
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 9), st.sampled_from(["prefetch", "launch"]),
+       st.integers(1, 9), st.integers(1, 4))
+def test_node_failure_between_prefetch_and_launch_bit_identical(
+        fail_at, stage, offset, window):
+    """A node dying after a window's prefetch was submitted (or right
+    before its launch) must re-plan or fall back cleanly, and every block
+    the repair touched must still be bit-identical to the pre-failure
+    truth — which is exactly what the synchronous path would produce, since
+    both decode the same exact GF system."""
+    with tempfile.TemporaryDirectory() as tmp:
+        store = _build(Path(tmp) / "s", stripes=20, window=window)
+        truth = _all_blocks(store)
+        node = store.stripes[0].node_of_block[0]
+        second = (node + offset) % store.num_nodes
+        if second == node:
+            second = (node + 1) % store.num_nodes
+        store.fail_node(node)
+        fired = []
+
+        def hook(hook_stage, index):
+            if hook_stage == stage and index == fail_at and not fired:
+                fired.append(index)
+                store.fail_node(second)
+
+        tele = store.repair_all(pipeline=True, pipeline_hook=hook)
+        assert tele["pipelined"]
+        store.revive_node(node)
+        store.revive_node(second)
+        assert _all_blocks(store) == truth
+
+
+# ------------------------------------------------------------- sharding
+def test_window_alignment_helpers():
+    from repro.dist.stripes import align_stripe_window, stripe_axis_span
+
+    assert stripe_axis_span(None) == 1
+    assert align_stripe_window(13, None) == 13
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    from repro.dist.sharding import with_rules
+    with with_rules(mesh) as mr:
+        assert stripe_axis_span(mr) == 1
+        assert align_stripe_window(13, mr) == 13
+
+
+@multidevice
+def test_window_alignment_rounds_to_device_span():
+    from repro.dist.sharding import with_rules
+    from repro.dist.stripes import align_stripe_window, stripe_axis_span
+
+    with with_rules(jax.make_mesh((8, 1), ("data", "model"))) as mr:
+        assert stripe_axis_span(mr) == 8
+        assert align_stripe_window(20, mr) == 16     # keeps 8-way launches
+        assert align_stripe_window(8, mr) == 8
+        assert align_stripe_window(5, mr) == 5       # sub-span: degrades
+
+
+@multidevice
+def test_pipelined_sharded_repair_bit_identical(tmp_path):
+    """The pipeline's launches shard over the mesh (devices=8) and stay
+    bit-identical to the unsharded synchronous path."""
+    from repro.dist.sharding import with_rules
+
+    sa = _build(tmp_path / "a", stripes=80, window=8)
+    sb = _build(tmp_path / "b", stripes=80)
+    node = sa.stripes[0].node_of_block[0]
+    with with_rules(jax.make_mesh((8, 1), ("data", "model"))):
+        rep = repair_failed_nodes(sa, [node], pipeline=True)
+    assert rep.pipelined
+    assert rep.devices == 8
+    # round-robin placement makes every pattern group 8 stripes -> every
+    # window is one full-span launch
+    assert rep.device_launches == 8 * rep.launches
+    rep_b = repair_failed_nodes(sb, [node], pipeline=False)
+    assert rep_b.devices == 1
+    assert _all_blocks(sa) == _all_blocks(sb)
+
+
+# ------------------------------------------------------- CI plumbing
+def _run_bench_cli(*args):
+    env = dict(os.environ, PYTHONPATH="src")
+    return subprocess.run([sys.executable, "-m", "benchmarks.run", *args],
+                          cwd=REPO, env=env, capture_output=True, text=True)
+
+
+def test_run_only_typo_exits_nonzero():
+    proc = _run_bench_cli("--only", "definitely_not_a_benchmark")
+    assert proc.returncode != 0
+    assert "unknown benchmark section" in proc.stderr
+
+
+def test_run_only_typo_in_list_exits_nonzero():
+    proc = _run_bench_cli("--only", "repair_costs,bogus_name")
+    assert proc.returncode != 0
+    assert "bogus_name" in proc.stderr
+
+
+def test_check_regression_gate(tmp_path):
+    from benchmarks.check_regression import main
+
+    results = tmp_path / "results"
+    results.mkdir()
+    baseline = tmp_path / "baseline.json"
+
+    def write(speedup, us):
+        (results / "batched_repair.json").write_text(json.dumps({
+            "min_single_speedup_at_S32": speedup,
+            "rows": [{"single_batched_us_per_stripe": us,
+                      "multi_speedup": speedup}],
+        }))
+        (results / "pipelined_repair.json").write_text(json.dumps({
+            "min_speedup_at_acceptance": speedup,
+            "rows": [{"stripes_per_sec_pipe": 1e6 / us}],
+        }))
+
+    write(8.0, 100.0)
+    common = ["--results", str(results), "--baseline", str(baseline)]
+    assert main(["--update-baseline", *common]) == 0
+    assert main(common) == 0                       # identical results pass
+    write(8.0 * 0.8, 100.0 / 0.8)                  # -20%: inside tolerance
+    assert main(common) == 0
+    write(8.0 * 0.5, 100.0 / 0.5)                  # -50%: regression
+    assert main(common) == 1
+    write(8.0, 100.0)
+    assert main(["--tolerance", "0.6", *common]) == 0   # looser gate passes
+    (results / "pipelined_repair.json").unlink()        # missing section
+    assert main(common) == 1
