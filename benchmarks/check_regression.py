@@ -50,9 +50,17 @@ def _pipelined_repair(doc: dict) -> dict[str, float]:
     }
 
 
+def _sharded_gather(doc: dict) -> dict[str, float]:
+    return {
+        "gather_speedup_at_max_devices": doc["gather_speedup_at_max_devices"],
+        "min_shard_balance": doc["min_shard_balance"],
+    }
+
+
 EXTRACTORS = {
     "batched_repair": _batched_repair,
     "pipelined_repair": _pipelined_repair,
+    "sharded_gather": _sharded_gather,
 }
 
 
@@ -112,12 +120,18 @@ def main(argv=None) -> int:
         print(f"error: {e}", file=sys.stderr)
         return 1
     if args.update_baseline:
+        # Merge into the existing baseline: reseeding one section (via
+        # --sections) must never drop the other sections' floors.
+        sections = dict(current)
+        if args.baseline.exists():
+            old = json.loads(args.baseline.read_text())
+            sections = {**old.get("sections", {}), **current}
         doc = {"tolerance": (args.tolerance if args.tolerance is not None
                              else DEFAULT_TOLERANCE),
                "note": "seeded from a --fast run; regenerate with "
                        "`python -m benchmarks.check_regression "
                        "--update-baseline` after intentional perf changes",
-               "sections": current}
+               "sections": sections}
         args.baseline.parent.mkdir(parents=True, exist_ok=True)
         args.baseline.write_text(json.dumps(doc, indent=1) + "\n")
         print(f"baseline written: {args.baseline}")

@@ -1,6 +1,6 @@
 """Benchmark driver — one section per paper table/figure.
 
-``python -m benchmarks.run [--fast] [--only SECTION]``
+``python -m benchmarks.run [--fast] [--only SECTION] [--list]``
 
 Sections (paper analogue in brackets):
   repair_costs      ADRC / ARC1 / ARC2, P1-P8 x 6 schemes   [Tables I, III]
@@ -12,6 +12,7 @@ Sections (paper analogue in brackets):
   batched_repair    batched vs per-stripe repair throughput [PR-1 tentpole]
   sharded_repair    repair throughput vs device count        [PR-2 tentpole]
   pipelined_repair  async pipeline vs sync repair overlap    [PR-3 tentpole]
+  sharded_gather    per-shard gather scaling x locality cost [PR-4 tentpole]
   kernels           encode kernels vs jnp reference          [§V substrate]
   ckpt_stripes      EC-checkpoint encode/repair per arch    [framework]
   roofline          dry-run roofline table                   [deliverable g]
@@ -19,9 +20,11 @@ Sections (paper analogue in brackets):
 Each section prints ``name,us_per_call,derived`` CSV rows and writes JSON to
 benchmarks/results/.
 
-``--only`` accepts a comma-separated list; an unknown name exits 2 (so a
-typo'd CI step cannot silently run nothing), and any failed section makes
-the whole run exit 1 (the regression gate depends on that).
+``--list`` prints the registered section names (one per line) and exits 0 —
+the discovery counterpart of the strict ``--only`` validation. ``--only``
+accepts a comma-separated list; an unknown name exits 2 (so a typo'd CI
+step cannot silently run nothing), and any failed section makes the whole
+run exit 1 (the regression gate depends on that).
 """
 from __future__ import annotations
 
@@ -34,8 +37,8 @@ RESULTS = Path(__file__).resolve().parent / "results"
 
 SECTIONS = ("repair_costs", "local_portion", "mttdl", "repair_time",
             "blocksize_sweep", "filelevel", "batched_repair",
-            "sharded_repair", "pipelined_repair", "kernels", "ckpt_stripes",
-            "roofline")
+            "sharded_repair", "pipelined_repair", "sharded_gather",
+            "kernels", "ckpt_stripes", "roofline")
 
 
 def main(argv=None) -> int:
@@ -44,7 +47,13 @@ def main(argv=None) -> int:
                     help=f"run only these sections; one of: {', '.join(SECTIONS)}")
     ap.add_argument("--fast", action="store_true",
                     help="narrow parameter subsets (CI mode)")
+    ap.add_argument("--list", action="store_true",
+                    help="print registered section names and exit")
     args = ap.parse_args(argv)
+    if args.list:
+        for name in SECTIONS:
+            print(name)
+        return 0
     RESULTS.mkdir(parents=True, exist_ok=True)
     if args.only:
         todo = [s.strip() for s in args.only.split(",") if s.strip()]

@@ -85,12 +85,19 @@ class BatchedCodecEngine:
         """Run a compiled plan on an already-gathered (S, |reads|, B) stack.
 
         The zero-copy entry point for callers that materialize the read
-        stack themselves (the stripe store fills one preallocated buffer
-        straight from disk) — skips the per-block gather/stack.
+        stack themselves — skips the per-block gather/stack. ``stacked``
+        may be a host numpy array (the stripe store's single-shard gather;
+        scattered straight onto the stripe sharding by the launch layer) or
+        a pre-sharded global ``jax.Array`` built per device shard
+        (``repro.dist.placement.assemble_shards``), which is consumed with
+        zero re-transfer — never bounced through one device.
         """
         import jax.numpy as jnp
 
-        stacked = jnp.asarray(stacked, jnp.uint8)
+        if isinstance(stacked, np.ndarray):
+            stacked = np.ascontiguousarray(stacked, np.uint8)
+        else:
+            stacked = jnp.asarray(stacked, jnp.uint8)
         if stacked.ndim != 3 or stacked.shape[1] != len(plan.reads):
             raise ValueError(f"expected (S, {len(plan.reads)}, B) stack for "
                              f"plan reads {plan.reads}, got {stacked.shape}")

@@ -5,8 +5,20 @@
 train, serve and launch layers program against. ``repro.dist.stripes`` is
 the codec-side counterpart: it shards the stripe axis ``S`` of ``(S, k, B)``
 batches over the mesh's data-parallel axes so fleet repair scales past one
-device.
+device. ``repro.dist.placement`` names where blocks physically live — a
+``PlacementMap`` maps (stripe, block) -> (node, shard) with a local/remote
+read cost model — and owns the per-shard gather geometry
+(``shard_layout``/``assemble_shards``) that lands disk reads directly on
+each device's shard.
 """
+from .placement import (  # noqa: F401
+    GatherShard,
+    PlacementMap,
+    ShardSlice,
+    assemble_shards,
+    plan_gather,
+    shard_layout,
+)
 from .sharding import (  # noqa: F401
     MeshRules,
     _resolve,

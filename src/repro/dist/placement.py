@@ -1,0 +1,205 @@
+"""Placement layer: (stripe, block) -> (node, shard) + locality cost model.
+
+The paper's repair gains are *bandwidth* gains — CP-LRC repair reads fewer
+blocks — and this module makes the fleet layer move those blocks along the
+shortest path. A :class:`PlacementMap` names, for every block, the node that
+holds it and the *shard* (host / failure domain) that node belongs to, plus
+a locality cost model: reads a shard serves from its own nodes are local,
+reads that cross shards pay a configurable ``remote_multiplier`` on the
+simulated link time (the same accounting XORing Elephants does for
+cross-rack repair traffic).
+
+The second half of the module is the sharded-gather geometry shared by the
+stripe store and the repair pipeline: :func:`shard_layout` turns an
+``(S, ...)`` batch shape plus :class:`~repro.dist.sharding.MeshRules` into
+the per-device contiguous stripe slices the mesh's stripe axis implies, and
+:func:`assemble_shards` builds the global device array straight from one
+host buffer per shard via ``jax.make_array_from_single_device_arrays`` — no
+single-host ``(S, |reads|, B)`` stack and no device-0 bounce ever exist on
+the path. Window alignment (``dist.stripes.align_stripe_window``) and this
+layout agree by construction: both derive from the same ``NamedSharding``,
+so an aligned window always yields ``span`` equal slices of ``S / span``
+stripes in global stripe order.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import jax
+import numpy as np
+
+from .sharding import MeshRules
+from .stripes import stripe_sharding, stripe_span
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementMap:
+    """(stripe, block) -> (node, shard), with a local/remote cost model.
+
+    ``shard_of_node[i]`` is the shard (host) node ``i`` lives in. ``node_of``
+    resolves a ``(sid, block)`` pair to its node id (the stripe store's
+    block placement); it may be ``None`` for maps that only answer
+    node-level questions. ``remote_multiplier`` scales the simulated link
+    time of a read whose source node lives outside the reading shard
+    (1.0 = locality-blind, matching the pre-placement model).
+    """
+    shard_of_node: tuple[int, ...]
+    remote_multiplier: float = 1.0
+    node_of: Optional[Callable[[int, int], int]] = None
+
+    @property
+    def num_shards(self) -> int:
+        return max(self.shard_of_node) + 1 if self.shard_of_node else 1
+
+    def locate(self, sid: int, block: int) -> tuple[int, int]:
+        """The (node, shard) holding ``(sid, block)``."""
+        if self.node_of is None:
+            raise ValueError("this PlacementMap has no (sid, block) resolver")
+        node = self.node_of(sid, block)
+        return node, self.shard_of_node[node]
+
+    def shard_of(self, node: int) -> int:
+        return self.shard_of_node[node]
+
+    def is_local(self, node: int, reader_shard: Optional[int]) -> bool:
+        """Is a read of ``node`` by ``reader_shard`` shard-local?
+
+        ``reader_shard=None`` means the read is not attributed to any shard
+        (client/degraded reads) and is charged as local.
+        """
+        if reader_shard is None:
+            return True
+        return self.shard_of_node[node] == reader_shard
+
+    def read_multiplier(self, node: int, reader_shard: Optional[int]) -> float:
+        """Link-time multiplier for one read (1.0 local, else remote cost)."""
+        return 1.0 if self.is_local(node, reader_shard) \
+            else self.remote_multiplier
+
+    def reader_shard(self, device_shard: int, span: int) -> int:
+        """Host shard serving device shard ``device_shard`` of ``span``.
+
+        Contiguous, order-preserving — the same stripe->device mapping
+        ``shard_layout`` / ``align_stripe_window`` use — so device shard d
+        of a span-wide launch reads through host ``d * num_shards // span``
+        (identity when the mesh span equals the host count).
+        """
+        if span <= 0:
+            return 0
+        return min(self.num_shards - 1, device_shard * self.num_shards // span)
+
+    @classmethod
+    def from_store(cls, store, num_shards: int = 1,
+                   remote_multiplier: Optional[float] = None
+                   ) -> "PlacementMap":
+        """Default node->shard map for a stripe store: ``num_shards``
+        contiguous node ranges (node ``i`` -> shard ``i*num_shards//N``),
+        resolving blocks through the store's stripe placement. The
+        multiplier defaults to ``store.cfg.remote_read_multiplier``."""
+        n = store.num_nodes
+        num_shards = max(1, min(int(num_shards), n))
+        shard = tuple(i * num_shards // n for i in range(n))
+        if remote_multiplier is None:
+            remote_multiplier = getattr(store.cfg, "remote_read_multiplier",
+                                        1.0)
+        return cls(shard_of_node=shard,
+                   remote_multiplier=float(remote_multiplier),
+                   node_of=lambda sid, b: store.stripes[sid].node_of_block[b])
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardSlice:
+    """One device shard's contiguous stripe range of an ``(S, ...)`` batch.
+
+    ``devices`` has more than one entry when other mesh axes replicate the
+    batch (e.g. a 4x2 mesh shards stripes over "data" and replicates over
+    "model"): every listed device holds a copy of the slice.
+    """
+    index: int
+    lo: int
+    hi: int
+    devices: tuple
+
+    @property
+    def size(self) -> int:
+        return self.hi - self.lo
+
+
+def shard_layout(shape: Sequence[int], mr: Optional[MeshRules]
+                 ) -> Optional[list[ShardSlice]]:
+    """Per-device stripe slices for an ``(S, ...)`` batch, global order.
+
+    ``None`` when the batch degrades to a single device (no rules, trivial
+    mesh, or an ``S`` the stripe axis does not divide) — callers keep the
+    one-buffer fast path there. Otherwise the slices partition ``[0, S)``
+    into ``span`` equal contiguous ranges, matching the mesh's
+    ``NamedSharding`` exactly (the launch consumes the assembled array with
+    zero re-transfer).
+    """
+    shape = tuple(shape)
+    if mr is None or stripe_span(shape, mr) <= 1:
+        return None
+    sharding = stripe_sharding(shape, mr)
+    groups: dict[tuple[int, int], list] = {}
+    for dev, idx in sharding.addressable_devices_indices_map(shape).items():
+        sl = idx[0]
+        lo = 0 if sl.start is None else int(sl.start)
+        hi = shape[0] if sl.stop is None else int(sl.stop)
+        groups.setdefault((lo, hi), []).append(dev)
+    return [ShardSlice(i, lo, hi, tuple(devs))
+            for i, ((lo, hi), devs) in enumerate(sorted(groups.items()))]
+
+
+@dataclasses.dataclass
+class GatherShard:
+    """One shard's gather work item: fill ``buf`` with stripes
+    ``[lo, hi)`` of the group, attributing every read to ``shard``."""
+    lo: int
+    hi: int
+    shard: int                             # reader (host) shard for accounting
+    buf: np.ndarray                        # (hi - lo, ...) preallocated
+    slice_: Optional[ShardSlice] = None    # None on the degraded path
+
+
+def plan_gather(shape: Sequence[int], mr: Optional[MeshRules], placement
+                ) -> tuple[Optional[list[ShardSlice]], list[GatherShard]]:
+    """Shared gather geometry for the stripe store and the repair pipeline.
+
+    Returns ``(layout, parts)``: per-shard preallocated buffers with their
+    stripe ranges and reader-shard attribution. A degraded batch (``layout
+    is None``) gets one full-shape buffer attributed to shard 0 — the
+    single-host gather, charged consistently on both the synchronous and
+    pipelined paths. Sharded batches map device shard *i* onto the
+    placement's host shards contiguously (``PlacementMap.reader_shard``),
+    the same stripe->device order the layout itself uses.
+    """
+    shape = tuple(shape)
+    layout = shard_layout(shape, mr)
+    if layout is None:
+        return None, [GatherShard(0, shape[0], 0,
+                                  np.empty(shape, np.uint8))]
+    span = len(layout)
+    parts = [GatherShard(
+        sl.lo, sl.hi,
+        placement.reader_shard(sl.index, span) if placement is not None
+        else sl.index,
+        np.empty((sl.size,) + shape[1:], np.uint8), sl) for sl in layout]
+    return layout, parts
+
+
+def assemble_shards(shape: Sequence[int], mr: MeshRules,
+                    layout: Sequence[ShardSlice],
+                    bufs: Sequence[np.ndarray]) -> jax.Array:
+    """Per-shard host buffers -> one global device array, no host stack.
+
+    Each buffer lands on its slice's device(s) with an independent
+    ``device_put`` (replicated slices are put once per replica device), and
+    the global ``(S, ...)`` array is stitched from the on-device shards —
+    the single-host gather + device-0 bounce the old read path paid is gone.
+    """
+    shape = tuple(shape)
+    sharding = stripe_sharding(shape, mr)
+    arrays = [jax.device_put(buf, dev)
+              for sl, buf in zip(layout, bufs) for dev in sl.devices]
+    return jax.make_array_from_single_device_arrays(shape, sharding, arrays)

@@ -110,6 +110,16 @@ def _mapped(fn: Callable, mesh, spec: P, coef_ndim: int,
         out_specs=spec))
 
 
+def _matches(batch, sharding: NamedSharding) -> bool:
+    """Is ``batch`` already laid out shard-for-shard as ``sharding``?"""
+    if not isinstance(batch, jax.Array):
+        return False
+    try:
+        return batch.sharding.is_equivalent_to(sharding, batch.ndim)
+    except TypeError:                     # older signature
+        return batch.sharding == sharding
+
+
 def sharded_launch(fn: Callable, coeffs, batch, mr: Optional[MeshRules],
                    **kwargs):
     """Run ``fn(coeffs, batch, **kwargs)`` as one device-parallel launch.
@@ -117,10 +127,25 @@ def sharded_launch(fn: Callable, coeffs, batch, mr: Optional[MeshRules],
     With no rules, or when the stripe axis degrades (indivisible ``S`` or a
     trivial mesh), falls through to a plain single-device call. ``kwargs``
     must be hashable (they key the jit cache).
+
+    ``batch`` may arrive three ways, cheapest first:
+
+    * a global ``jax.Array`` already sharded as the stripe spec resolves
+      (e.g. assembled per shard by ``repro.dist.placement.assemble_shards``)
+      — consumed with **zero re-transfer**;
+    * a host ``numpy`` array — scattered shard-by-shard with one
+      ``device_put`` onto the target sharding (no device-0 bounce);
+    * anything else (including a single-device ``jax.Array``) — resharded
+      by ``device_put`` onto the stripe sharding.
     """
+    import jax.numpy as jnp
+
     if stripe_span(batch.shape, mr) <= 1:
-        return fn(coeffs, batch, **kwargs)
+        return fn(coeffs, jnp.asarray(batch, jnp.uint8), **kwargs)
     spec = stripe_spec(batch.shape, mr)
+    sharding = NamedSharding(mr.mesh, spec)
+    if not _matches(batch, sharding):
+        batch = jax.device_put(batch, sharding)
     mapped = _mapped(fn, mr.mesh, spec, coeffs.ndim,
                      tuple(sorted(kwargs.items())))
     return mapped(coeffs, batch)

@@ -115,7 +115,7 @@ class CheckpointManager:
         store = self.store_for(step)
         info = json.loads(
             (self.root / f"step{step}" / "ckpt_meta.json").read_text())
-        before = dataclasses.replace(store.telemetry)
+        before = store.telemetry.copy()
         shards = [store.get(f"shard{h}") for h in range(self.cfg.store.k)]
         flat = np.concatenate(shards)[:info["bytes"]]
         state = _unflatten_bytes(template, flat, info["leaves"])

@@ -72,7 +72,7 @@ def restripe(store: StripeStore, new_cfg: StoreConfig, root) -> tuple[StripeStor
     """Re-encode every object into a store with new geometry (elastic
     scaling). Returns (new store, bandwidth telemetry)."""
     new_store = StripeStore(root, new_cfg)
-    before = dataclasses.replace(store.telemetry)
+    before = store.telemetry.copy()
     for key, meta in list(store.objects.items()):
         if key.endswith("#cont"):
             continue  # continuation objects ride along with their head

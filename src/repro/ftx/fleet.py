@@ -114,6 +114,12 @@ class FleetRepairReport:
     compute_seconds: float = 0.0
     write_seconds: float = 0.0
     overlap_seconds: float = 0.0
+    # Locality accounting (repro.dist.placement.PlacementMap): repair reads
+    # served shard-locally vs. across shards, and the gather bytes each
+    # shard pulled — the per-shard split of the batched read stack.
+    local_reads: int = 0
+    remote_reads: int = 0
+    gather_bytes_per_shard: dict = dataclasses.field(default_factory=dict)
 
     @property
     def stripes_per_launch(self) -> float:
@@ -125,6 +131,12 @@ class FleetRepairReport:
         busy = self.read_seconds + self.compute_seconds + self.write_seconds
         return self.overlap_seconds / busy if busy > 0 else 0.0
 
+    @property
+    def local_read_fraction(self) -> float:
+        """Fraction of repair reads served from the reading shard's nodes."""
+        total = self.local_reads + self.remote_reads
+        return self.local_reads / total if total else 1.0
+
 
 def repair_failed_nodes(store, nodes: Iterable[int], *,
                         spare_of: Optional[dict[int, int]] = None,
@@ -132,7 +144,8 @@ def repair_failed_nodes(store, nodes: Iterable[int], *,
                         batched: bool = True,
                         mesh_rules=None,
                         pipeline: Optional[bool] = None,
-                        window: Optional[int] = None) -> FleetRepairReport:
+                        window: Optional[int] = None,
+                        placement=None) -> FleetRepairReport:
     """Fail ``nodes`` and rebuild every affected stripe in the store.
 
     All stripes whose blocks lived on the failed nodes are grouped by
@@ -144,8 +157,13 @@ def repair_failed_nodes(store, nodes: Iterable[int], *,
     overlap observable. ``mesh_rules`` (or an ambient ``with_rules``
     context) device-shards each launch's stripe axis; the report's
     ``devices``/``device_launches`` fields record the resulting per-device
-    launch counts. ``revive`` marks the nodes UP again after the rebuild
-    (blocks were re-materialized in place or onto spares).
+    launch counts. ``placement`` (a
+    ``repro.dist.placement.PlacementMap``; defaults to the store's, else
+    one derived from the node->shard default for the mesh's stripe-axis
+    span) drives the per-shard gather and the local/remote read accounting
+    reported via ``local_reads``/``remote_reads``/
+    ``gather_bytes_per_shard``. ``revive`` marks the nodes UP again after
+    the rebuild (blocks were re-materialized in place or onto spares).
     """
     nodes = tuple(nodes)
     for node in nodes:
@@ -153,7 +171,7 @@ def repair_failed_nodes(store, nodes: Iterable[int], *,
     before = store.codec.planner.stats.snapshot()
     tele = store.repair_all(spare_of=spare_of, batched=batched,
                             mesh_rules=mesh_rules, pipeline=pipeline,
-                            window=window)
+                            window=window, placement=placement)
     after = store.codec.planner.stats.snapshot()
     if revive:
         for node in nodes:
@@ -179,4 +197,7 @@ def repair_failed_nodes(store, nodes: Iterable[int], *,
         compute_seconds=tele.get("compute_seconds", 0.0),
         write_seconds=tele.get("write_seconds", 0.0),
         overlap_seconds=tele.get("overlap_seconds", 0.0),
+        local_reads=tele.get("local_reads", 0),
+        remote_reads=tele.get("remote_reads", 0),
+        gather_bytes_per_shard=tele.get("gather_bytes_per_shard", {}),
     )

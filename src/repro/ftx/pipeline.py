@@ -15,11 +15,18 @@ This module overlaps the three stages with a classic double buffer over
   ``StoreConfig.pipeline_window`` stripes (capped by ``batch_stripes`` and
   the gathered-stack byte budget, and rounded to the mesh's stripe-axis
   device span so sharded launches keep their full parallelism);
-* window *i+1*'s surviving blocks prefetch through a reader thread pool
-  (every read goes through ``StripeStore._read_block`` — node liveness and
-  the simulated per-node latency/bandwidth model apply unchanged) while
-  window *i* runs through ``BatchedCodecEngine.execute`` (including the
-  sharded ``MeshRules`` path);
+* window *i+1*'s surviving blocks prefetch through *per-shard* reader
+  pools: under a sharded mesh each device shard gets its own
+  ``prefetch_threads``-wide pool — modelling each host's independent
+  disks/NIC — filling its own host buffer with only the blocks its stripes
+  need, assembled into the global batch via
+  ``repro.dist.placement.assemble_shards`` (no single-host stack). Every
+  read still goes through ``StripeStore._read_block`` — node liveness and
+  the simulated per-node latency/bandwidth model apply unchanged, with the
+  ``PlacementMap`` charging cross-shard reads at the configured remote
+  multiplier — while window *i* runs through
+  ``BatchedCodecEngine.execute`` (zero re-transfer on the pre-sharded
+  batch);
 * write-back of window *i*'s rebuilt blocks happens on a dedicated writer
   thread, overlapped with the launch of window *i+1*.
 
@@ -37,6 +44,7 @@ working, and ``overlap_seconds`` quantifies it.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import threading
 import time
@@ -45,7 +53,8 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
-from repro.dist.stripes import align_stripe_window
+from repro.dist.placement import assemble_shards, plan_gather
+from repro.dist.stripes import align_stripe_window, stripe_axis_span
 
 # A hook receives (stage, window_index) at: "prefetch" (reads submitted),
 # "launch" (about to execute), "writeback" (write submitted), "replan"
@@ -65,9 +74,17 @@ class RepairWindow:
 
 @dataclasses.dataclass
 class _Fetch:
-    """An in-flight window prefetch: futures filling a preallocated stack."""
+    """An in-flight window prefetch: futures filling per-shard buffers.
+
+    ``layout`` is the window's device-shard geometry (None = degraded /
+    single device, one buffer). With a layout, ``bufs[i]`` is shard *i*'s
+    slice of the ``(S, |reads|, B)`` batch, filled only by that shard's
+    reader pool.
+    """
     window: RepairWindow
-    stacked: np.ndarray                    # (S, |reads|, B), filled by futures
+    shape: tuple[int, int, int]
+    layout: Optional[list]                 # list[ShardSlice] | None
+    bufs: list[np.ndarray]
     futures: list[Future]
     t_submit: float
 
@@ -107,12 +124,18 @@ class RepairPipeline:
                  mesh_rules=None, window: Optional[int] = None,
                  threads: Optional[int] = None,
                  byte_budget: Optional[int] = None,
-                 hook: Optional[PipelineHook] = None):
+                 hook: Optional[PipelineHook] = None,
+                 placement=None):
         self.store = store
         self.spare_of = spare_of
         self.mesh_rules = mesh_rules
+        self.placement = placement
         cfg = store.cfg
         self.window = int(window or cfg.pipeline_window or cfg.batch_stripes)
+        # Reader width is per gather shard: each simulated host prefetches
+        # its own shard's blocks through its own pool (its own disks/NIC),
+        # so sharded gathers scale I/O with the shard count instead of
+        # funnelling every read through one host-wide pool.
         self.threads = max(1, int(threads or cfg.prefetch_threads))
         self.byte_budget = byte_budget
         self.hook = hook or (lambda stage, index: None)
@@ -136,23 +159,41 @@ class RepairPipeline:
         return out
 
     # ------------------------------------------------------------- stages
-    def _fill(self, stacked: np.ndarray, i: int, j: int, sid: int, b: int
-              ) -> None:
-        stacked[i, j] = self.store._read_block(sid, b)
+    def _fill(self, buf: np.ndarray, i: int, j: int, sid: int, b: int,
+              shard: int) -> None:
+        buf[i, j] = self.store._read_block(sid, b, shard=shard,
+                                           placement=self.placement)
 
-    def _prefetch(self, pool: ThreadPoolExecutor, win: RepairWindow) -> _Fetch:
-        stacked = np.empty((len(win.sids), len(win.compiled.reads),
-                            self.store.cfg.block_size), np.uint8)
+    def _prefetch(self, pools: list[ThreadPoolExecutor], win: RepairWindow
+                  ) -> _Fetch:
+        """Submit a window's reads, partitioned per gather shard.
+
+        Sharded windows fill one buffer per device shard through that
+        shard's own reader pool; degraded windows (no mesh, or a ragged
+        tail the span does not divide) fall back to one buffer on pool 0,
+        attributed to gather shard 0 — matching the synchronous path
+        bit-for-bit and count-for-count.
+        """
+        reads = win.compiled.reads
+        shape = (len(win.sids), len(reads), self.store.cfg.block_size)
+        layout, parts = plan_gather(shape, self.mesh_rules, self.placement)
         t0 = time.perf_counter()
-        futures = [pool.submit(self._fill, stacked, i, j, sid, b)
-                   for i, sid in enumerate(win.sids)
-                   for j, b in enumerate(win.compiled.reads)]
-        return _Fetch(win, stacked, futures, t0)
+        futures: list[Future] = []
+        for part in parts:
+            pool = pools[part.slice_.index % len(pools)] if layout \
+                else pools[0]
+            futures += [pool.submit(self._fill, part.buf, i, j, sid, b,
+                                    part.shard)
+                        for i, sid in enumerate(win.sids[part.lo:part.hi])
+                        for j, b in enumerate(reads)]
+        return _Fetch(win, shape, layout, [p.buf for p in parts],
+                      futures, t0)
 
-    def _collect(self, fetch: _Fetch, res: PipelineResult
-                 ) -> Optional[np.ndarray]:
-        """Wait out a prefetch. Returns the stack, or None when node deaths
-        invalidated it (the window must re-plan). Non-I/O errors raise."""
+    def _collect(self, fetch: _Fetch, res: PipelineResult):
+        """Wait out a prefetch. Returns the batch — a host stack for
+        degraded windows, or the pre-sharded global array assembled from
+        the per-shard buffers — or None when node deaths invalidated it
+        (the window must re-plan). Non-I/O errors raise."""
         wait(fetch.futures)
         t1 = time.perf_counter()
         self._span(res, "read", fetch.window.index, fetch.t_submit, t1)
@@ -165,9 +206,14 @@ class RepairPipeline:
                 io_failed = True
             else:
                 raise err
-        return None if io_failed else fetch.stacked
+        if io_failed:
+            return None
+        if fetch.layout is None:
+            return fetch.bufs[0]
+        return assemble_shards(fetch.shape, self.mesh_rules, fetch.layout,
+                               fetch.bufs)
 
-    def _launch(self, win: RepairWindow, stacked: np.ndarray,
+    def _launch(self, win: RepairWindow, stacked,
                 res: PipelineResult) -> dict[int, np.ndarray]:
         engine = self.store.engine
         t0 = time.perf_counter()
@@ -196,13 +242,13 @@ class RepairPipeline:
                     getattr(res, f"{stage}_seconds") + (t1 - t0))
 
     # ------------------------------------------------------------- replan
-    def _replan(self, pool: ThreadPoolExecutor, win: RepairWindow,
+    def _replan(self, pools: list[ThreadPoolExecutor], win: RepairWindow,
                 res: PipelineResult) -> None:
         """Slow path: nodes died under this window's prefetch. Regroup its
         stripes by their *current* down sets, compile fresh plans, and
-        repair synchronously (reads still fan out over the pool). Loops
-        while further failures land; every retry consumes a new failure, so
-        the node count bounds the iterations."""
+        repair synchronously (reads still fan out over the shard pools).
+        Loops while further failures land; every retry consumes a new
+        failure, so the node count bounds the iterations."""
         store = self.store
         pending = list(win.sids)
         for _ in range(1 + len(store.nodes)):
@@ -221,7 +267,7 @@ class RepairPipeline:
                     raise IOError(f"stripes {sids} unrecoverable: "
                                   f"{sorted(down)}") from None
                 sub = RepairWindow(win.index, tuple(sids), down, compiled)
-                stacked = self._collect(self._prefetch(pool, sub), res)
+                stacked = self._collect(self._prefetch(pools, sub), res)
                 if stacked is None:          # yet another failure; go again
                     retry.extend(sids)
                     continue
@@ -245,9 +291,15 @@ class RepairPipeline:
         if not windows:
             return res
         t_run = time.perf_counter()
-        with ThreadPoolExecutor(self.threads,
-                                thread_name_prefix="repair-read") as readers, \
-                ThreadPoolExecutor(1, thread_name_prefix="repair-write") as writer:
+        # One reader pool per gather shard (each simulated host's own
+        # disks); a single pool when the mesh degrades to one device.
+        num_pools = max(1, stripe_axis_span(self.mesh_rules))
+        with contextlib.ExitStack() as stack:
+            readers = [stack.enter_context(ThreadPoolExecutor(
+                self.threads, thread_name_prefix=f"repair-read-s{s}"))
+                for s in range(num_pools)]
+            writer = stack.enter_context(ThreadPoolExecutor(
+                1, thread_name_prefix="repair-write"))
             writes: list[Future] = []
             cur = self._prefetch(readers, windows[0])
             self.hook("prefetch", 0)

@@ -66,11 +66,15 @@ class StoreConfig:
     seed: int = 0
     batch_stripes: int = 64            # max stripes per batched repair launch
     pipeline_window: int = 32          # stripes per async-repair window (0 = sync)
-    prefetch_threads: int = 8          # reader pool width for the pipeline
+    prefetch_threads: int = 8          # reader pool width, per gather shard
     io_stall_scale: float = 0.0        # fraction of each read's *simulated*
     #                                    time actually slept (wall-clock),
     #                                    making the per-node latency model
     #                                    real for overlap experiments
+    remote_read_multiplier: float = 1.0  # simulated link-time cost of a read
+    #                                    whose source node lives outside the
+    #                                    reading shard (PlacementMap); 1.0
+    #                                    keeps the locality-blind model
 
 
 @dataclasses.dataclass
@@ -101,20 +105,37 @@ class Telemetry:
     read_seconds: float = 0.0
     compute_seconds: float = 0.0
     write_seconds: float = 0.0
+    # Locality accounting (PlacementMap): reads served from the reading
+    # shard's own nodes vs. cross-shard fetches, and how many gather bytes
+    # each shard pulled from disk during repair gathers.
+    local_reads: int = 0
+    remote_reads: int = 0
+    gather_bytes_per_shard: dict = dataclasses.field(default_factory=dict)
+
+    def copy(self) -> "Telemetry":
+        snap = dataclasses.replace(self)
+        snap.gather_bytes_per_shard = dict(self.gather_bytes_per_shard)
+        return snap
 
     def reset(self) -> "Telemetry":
-        snap = dataclasses.replace(self)
+        snap = self.copy()
         self.blocks_read = self.bytes_read = 0
         self.repairs_local = self.repairs_global = 0
         self.sim_seconds = 0.0
         self.read_seconds = self.compute_seconds = self.write_seconds = 0.0
+        self.local_reads = self.remote_reads = 0
+        self.gather_bytes_per_shard = {}
         return snap
 
 
 class StripeStore:
     def __init__(self, root: str | Path, cfg: StoreConfig,
-                 num_nodes: Optional[int] = None):
+                 num_nodes: Optional[int] = None, placement=None):
         self.cfg = cfg
+        # Default PlacementMap for repairs (repro.dist.placement); None
+        # derives one per repair from the node->shard default and the
+        # active mesh's stripe-axis span.
+        self.placement = placement
         self.scheme = make_scheme(cfg.scheme, cfg.k, cfg.r, cfg.p)
         self.codec = StripeCodec(self.scheme, backend=cfg.backend)
         # Batched executor sharing the codec's plan cache: fleet repair
@@ -149,14 +170,26 @@ class StripeStore:
         return self.root / f"node{node}" / f"s{sid}_b{block}.blk"
 
     def _read_block(self, sid: int, block: int,
-                    rng: Optional[tuple[int, int]] = None) -> np.ndarray:
+                    rng: Optional[tuple[int, int]] = None, *,
+                    shard: Optional[int] = None,
+                    placement=None) -> np.ndarray:
+        """Read one block (or byte range), charging the simulated link model.
+
+        ``shard``/``placement`` attribute the read to a gather shard: a read
+        whose source node lives outside ``shard`` is *remote* and pays the
+        placement's ``remote_multiplier`` on its link time. Reads with no
+        shard (client/degraded paths) are charged as local.
+        """
         node = self.stripes[sid].node_of_block[block]
         if self.nodes[node] is NodeState.DOWN:
             raise IOError(f"node {node} is down")
         data = np.fromfile(self._block_path(sid, block), dtype=np.uint8)
         lo, hi = rng if rng else (0, len(data))
+        local = placement is None or placement.is_local(node, shard)
         dt = ((hi - lo) * 8 / (self.cfg.bandwidth_gbps * 1e9)
               + self.latency_ms[node] / 1e3)
+        if not local:
+            dt *= placement.remote_multiplier
         if self.cfg.io_stall_scale > 0.0:
             # Make the simulated link model wall-real (scaled): serial
             # readers pay it in full, the pipeline's prefetch pool overlaps
@@ -166,6 +199,13 @@ class StripeStore:
             self.telemetry.blocks_read += 1
             self.telemetry.bytes_read += hi - lo
             self.telemetry.sim_seconds += dt
+            if local:
+                self.telemetry.local_reads += 1
+            else:
+                self.telemetry.remote_reads += 1
+            if shard is not None:
+                gbs = self.telemetry.gather_bytes_per_shard
+                gbs[shard] = gbs.get(shard, 0) + (hi - lo)
         return data[lo:hi]
 
     def _write_block(self, sid: int, block: int, data: np.ndarray) -> None:
@@ -329,7 +369,7 @@ class StripeStore:
                    batched: bool = True, mesh_rules=None,
                    pipeline: Optional[bool] = None,
                    window: Optional[int] = None,
-                   pipeline_hook=None) -> dict:
+                   pipeline_hook=None, placement=None) -> dict:
         """Rebuild every block resident on DOWN nodes onto spares (or back in
         place) using the multi-node planner. Returns telemetry for the repair
         (the paper's repair-time experiments).
@@ -358,13 +398,29 @@ class StripeStore:
         executions across all launches). ``read/compute/write_seconds``
         report per-stage wall spans; ``overlap_seconds`` is the stage time
         the pipeline hid (0 on the synchronous paths).
+
+        ``placement`` (a ``repro.dist.placement.PlacementMap``; defaults to
+        the store's, else one derived from the node->shard default for the
+        mesh's stripe-axis span) drives the *sharded gather*: each device
+        shard's slice of the batched ``(S, |reads|, B)`` input is filled
+        into its own host buffer and device_put directly onto that shard —
+        no single-host stack exists — and every read is charged local or
+        remote against the placement's locality cost model
+        (``local_reads``/``remote_reads``/``gather_bytes_per_shard``).
         """
+        from repro.dist.placement import PlacementMap
         from repro.dist.sharding import current_rules
+        from repro.dist.stripes import stripe_axis_span
 
         mr = mesh_rules if mesh_rules is not None else current_rules()
+        if placement is None:
+            placement = self.placement
+        if placement is None:
+            placement = PlacementMap.from_store(
+                self, num_shards=max(1, stripe_axis_span(mr)))
         use_pipeline = batched and (pipeline if pipeline is not None
                                     else self.cfg.pipeline_window > 0)
-        before = dataclasses.replace(self.telemetry)
+        before = self.telemetry.copy()
         t0 = time.perf_counter()
         affected: dict[frozenset[int], list[int]] = {}
         for sid in self.stripes:
@@ -407,6 +463,7 @@ class StripeStore:
             res = RepairPipeline(
                 self, spare_of=spare_of, mesh_rules=mr, window=window,
                 byte_budget=_BATCH_BYTE_BUDGET, hook=pipeline_hook,
+                placement=placement,
             ).run(work)
             launches += res.launches
             devices = max(devices, res.devices)
@@ -425,14 +482,20 @@ class StripeStore:
                 step = launch_step(self.cfg, len(compiled.reads), window)
                 for lo in range(0, len(sids), step):
                     span = self._repair_group(sids[lo:lo + step], down,
-                                              compiled, spare_of, mr)
+                                              compiled, spare_of, mr,
+                                              placement)
                     launches += 1
                     devices = max(devices, span)
                     device_launches += span
         if unrecoverable is not None:
             raise unrecoverable
-        t = dataclasses.replace(self.telemetry)
+        t = self.telemetry.copy()
         wall = time.perf_counter() - t0
+        gather_shards = {
+            s: t.gather_bytes_per_shard.get(s, 0)
+            - before.gather_bytes_per_shard.get(s, 0)
+            for s in t.gather_bytes_per_shard}
+        gather_shards = {s: v for s, v in gather_shards.items() if v}
         stage_sum = ((t.read_seconds - before.read_seconds)
                      + (t.compute_seconds - before.compute_seconds)
                      + (t.write_seconds - before.write_seconds))
@@ -456,23 +519,51 @@ class StripeStore:
             "overlap_seconds": max(0.0, stage_sum - wall),
             "repairs_local": t.repairs_local - before.repairs_local,
             "repairs_global": t.repairs_global - before.repairs_global,
+            "local_reads": t.local_reads - before.local_reads,
+            "remote_reads": t.remote_reads - before.remote_reads,
+            "gather_bytes_per_shard": gather_shards,
         }
+
+    def _gather_group(self, sids: list[int], reads: tuple[int, ...],
+                      mesh_rules, placement):
+        """Gather surviving blocks for a stripe group, shard by shard.
+
+        Under a sharded mesh each device shard's slice of the batched
+        ``(S, |reads|, B)`` input fills its *own* host buffer — only the
+        blocks the shard's stripes need — and the buffers are device_put
+        directly onto their shards and stitched into the global array
+        (``repro.dist.placement.assemble_shards``). No single-host stack of
+        the full batch exists. Degraded/single-device launches keep the
+        one-buffer fast path (attributed to gather shard 0). Every read is
+        charged local/remote against ``placement``.
+        """
+        from repro.dist.placement import assemble_shards, plan_gather
+
+        shape = (len(sids), len(reads), self.cfg.block_size)
+        layout, parts = plan_gather(shape, mesh_rules, placement)
+        for part in parts:
+            for i, sid in enumerate(sids[part.lo:part.hi]):
+                for j, b in enumerate(reads):
+                    part.buf[i, j] = self._read_block(
+                        sid, b, shard=part.shard, placement=placement)
+        if layout is None:
+            return parts[0].buf
+        return assemble_shards(shape, mesh_rules, layout,
+                               [p.buf for p in parts])
 
     def _repair_group(self, sids: list[int], down: frozenset[int],
                       compiled, spare_of: Optional[dict[int, int]],
-                      mesh_rules=None) -> int:
-        """Batched repair of stripes sharing one failure pattern: fill ONE
-        preallocated (S, |reads|, B) stack straight from disk and run a
-        single launch (device-parallel under ``mesh_rules``; no per-block
-        intermediate copies). Stages run strictly serial here — the span
-        accounting makes that visible next to the pipelined path. Returns
-        the device span of the launch."""
-        stacked = np.empty((len(sids), len(compiled.reads),
-                            self.cfg.block_size), np.uint8)
+                      mesh_rules=None, placement=None) -> int:
+        """Batched repair of stripes sharing one failure pattern: per-shard
+        gathers land each device's slice of the (S, |reads|, B) input
+        straight on its shard (one host buffer per shard, no full-batch
+        stack) and run a single launch (device-parallel under
+        ``mesh_rules``; no per-block intermediate copies). Stages run
+        strictly serial here — the span accounting makes that visible next
+        to the pipelined path. Returns the device span of the launch."""
         t0 = time.perf_counter()
-        for i, sid in enumerate(sids):
-            for j, b in enumerate(compiled.reads):
-                stacked[i, j] = self._read_block(sid, b)
+        stacked = self._gather_group(sids, compiled.reads, mesh_rules,
+                                     placement)
         t1 = time.perf_counter()
         out = np.asarray(self.engine.execute(compiled, stacked, mesh_rules))
         rebuilt = {b: out[:, t, :] for t, b in enumerate(compiled.targets)}

@@ -113,11 +113,20 @@ def gf_matmul_batch_op(coef, data, *, backend: str = "gf",
     one launch per device via ``shard_map`` (repro.dist.stripes); an
     indivisible S degrades to the single-device launch. Stripes are
     independent, so the result is bit-identical either way.
+
+    ``data`` is handed to :func:`~repro.dist.stripes.sharded_launch`
+    *unconverted*: a host numpy stack scatters straight onto the stripe
+    sharding and a pre-sharded global array passes through with zero
+    re-transfer, so the batch never materializes on one device first.
     """
     if interpret is None:
         interpret = _on_cpu()
     coef = jnp.asarray(coef, jnp.uint8)
-    data = jnp.asarray(data, jnp.uint8)
+    if isinstance(data, np.ndarray):
+        if data.dtype != np.uint8:
+            data = np.ascontiguousarray(data, np.uint8)
+    elif not isinstance(data, jax.Array) or data.dtype != jnp.uint8:
+        data = jnp.asarray(data, jnp.uint8)
     if data.ndim != 3:
         raise ValueError(f"expected (S, k, B) data, got {data.shape}")
     if backend not in ("gf", "ref"):

@@ -1,0 +1,56 @@
+"""Backend bit-parity: one batched encode/repair/decode through every
+registered kernel backend must produce identical bytes.
+
+Guards the ROADMAP "route batched decode through crs/mxu on TPU" follow-on:
+whatever backend the dispatch layer picks, GF(2^8) bytes may never change.
+Backends whose kernels are genuinely unavailable on the host skip rather
+than fail (on CPU containers all of them run via the Pallas interpreter or
+the fused table path).
+"""
+import numpy as np
+import pytest
+
+from repro.core.engine import BatchedCodecEngine
+from repro.core.schemes import make_scheme
+from repro.kernels.ops import BACKENDS
+
+
+@pytest.fixture(scope="module")
+def reference():
+    scheme = make_scheme("cp-azure", 8, 2, 2)
+    rng = np.random.default_rng(7)
+    data = rng.integers(0, 256, (8, scheme.k, 512), dtype=np.uint8)
+    ref = BatchedCodecEngine(scheme, backend="ref")
+    stripes = np.asarray(ref.encode(data))
+    pattern = frozenset({0, scheme.k})    # data block + local parity cascade
+    avail = {i: stripes[:, i, :] for i in range(scheme.n)
+             if i not in pattern}
+    want, _ = ref.repair_multi(pattern, avail)
+    want = {b: np.asarray(v) for b, v in want.items()}
+    return scheme, data, stripes, pattern, avail, want
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_batched_repair_bit_parity_across_backends(backend, reference):
+    scheme, data, stripes, pattern, avail, want = reference
+    try:
+        eng = BatchedCodecEngine(scheme, backend=backend)
+        enc = np.asarray(eng.encode(data))
+        got, _ = eng.repair_multi(pattern, avail)
+        got = {b: np.asarray(v) for b, v in got.items()}
+        # decode the data blocks with block 0 replaced by its local parity
+        ids = list(range(1, scheme.k)) + [scheme.k]
+        dec = np.asarray(eng.decode({i: stripes[:, i, :] for i in ids}))
+    except NotImplementedError as e:      # kernel unavailable on this host
+        pytest.skip(f"backend {backend!r} unavailable here: {e}")
+    assert (enc == stripes).all(), f"{backend}: encode bytes differ"
+    for b in sorted(pattern):
+        assert (got[b] == want[b]).all(), \
+            f"{backend}: repaired block {b} differs"
+    assert (dec == data).all(), f"{backend}: decode bytes differ"
+
+
+def test_unknown_backend_rejected():
+    scheme = make_scheme("cp-azure", 6, 2, 2)
+    with pytest.raises(ValueError, match="unknown kernel backend"):
+        BatchedCodecEngine(scheme, backend="nope")

@@ -255,6 +255,14 @@ def _run_bench_cli(*args):
                           cwd=REPO, env=env, capture_output=True, text=True)
 
 
+def test_run_list_prints_sections_and_exits_zero():
+    proc = _run_bench_cli("--list")
+    assert proc.returncode == 0
+    from benchmarks.run import SECTIONS
+
+    assert proc.stdout.split() == list(SECTIONS)
+
+
 def test_run_only_typo_exits_nonzero():
     proc = _run_bench_cli("--only", "definitely_not_a_benchmark")
     assert proc.returncode != 0
@@ -286,7 +294,8 @@ def test_check_regression_gate(tmp_path):
         }))
 
     write(8.0, 100.0)
-    common = ["--results", str(results), "--baseline", str(baseline)]
+    common = ["--results", str(results), "--baseline", str(baseline),
+              "--sections", "batched_repair,pipelined_repair"]
     assert main(["--update-baseline", *common]) == 0
     assert main(common) == 0                       # identical results pass
     write(8.0 * 0.8, 100.0 / 0.8)                  # -20%: inside tolerance
@@ -295,5 +304,11 @@ def test_check_regression_gate(tmp_path):
     assert main(common) == 1
     write(8.0, 100.0)
     assert main(["--tolerance", "0.6", *common]) == 0   # looser gate passes
+    # reseeding one section must merge, not drop the others' floors
+    assert main(["--update-baseline", "--results", str(results),
+                 "--baseline", str(baseline),
+                 "--sections", "batched_repair"]) == 0
+    kept = json.loads(baseline.read_text())["sections"]
+    assert "pipelined_repair" in kept and "batched_repair" in kept
     (results / "pipelined_repair.json").unlink()        # missing section
     assert main(common) == 1
