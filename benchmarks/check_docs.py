@@ -1,0 +1,58 @@
+"""Docs-consistency gate: ``benchmarks.run --list`` <-> EXPERIMENTS.md.
+
+``python -m benchmarks.check_docs``
+
+Asserts that every benchmark section registered in ``benchmarks.run``
+(what ``--list`` prints) has a row in the section table of
+``docs/EXPERIMENTS.md``, and that every row in that table names a
+registered section — so the table cannot rot in either direction: a new
+benchmark lands with its paper analogue documented, and a renamed/removed
+benchmark takes its stale row with it. Runs in the CI lint job (no jax
+needed; ``benchmarks.run`` is import-light by design).
+
+Exit 0 when the two sets match, 1 with a per-name diff otherwise.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+from benchmarks.run import SECTIONS
+
+EXPERIMENTS = Path(__file__).resolve().parents[1] / "docs" / "EXPERIMENTS.md"
+
+# First column of the section table: | `section_name` | paper analogue | ...
+_ROW = re.compile(r"^\|\s*`([a-z_]+)`\s*\|", re.MULTILINE)
+
+
+def table_sections(text: str) -> list[str]:
+    """Section names from the EXPERIMENTS.md table, in row order."""
+    return _ROW.findall(text)
+
+
+def main() -> int:
+    documented = table_sections(EXPERIMENTS.read_text())
+    dupes = sorted({s for s in documented if documented.count(s) > 1})
+    registered = set(SECTIONS)
+    missing_doc = [s for s in SECTIONS if s not in documented]
+    stale_doc = [s for s in documented if s not in registered]
+    ok = not (missing_doc or stale_doc or dupes)
+    if missing_doc:
+        print("sections registered in benchmarks.run but missing from the "
+              f"docs/EXPERIMENTS.md table: {', '.join(missing_doc)}",
+              file=sys.stderr)
+    if stale_doc:
+        print("rows in the docs/EXPERIMENTS.md table naming no registered "
+              f"benchmark section: {', '.join(stale_doc)}", file=sys.stderr)
+    if dupes:
+        print(f"duplicate rows in the docs/EXPERIMENTS.md table: "
+              f"{', '.join(dupes)}", file=sys.stderr)
+    if ok:
+        print(f"docs consistent: {len(SECTIONS)} benchmark sections all "
+              f"documented in {EXPERIMENTS.name}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

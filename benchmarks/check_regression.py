@@ -57,10 +57,22 @@ def _sharded_gather(doc: dict) -> dict[str, float]:
     }
 
 
+def _stripe_schedule(doc: dict) -> dict[str, float]:
+    # Locality fractions are deterministic (seeded placement, counted
+    # reads), so these floors hold machine-independently — a scheduler
+    # change that stops beating the contiguous assignment on the skewed
+    # scenarios cannot merge green.
+    return {
+        "min_local_uplift": doc["min_local_uplift"],
+        "min_scheduled_local_fraction": doc["min_scheduled_local_fraction"],
+    }
+
+
 EXTRACTORS = {
     "batched_repair": _batched_repair,
     "pipelined_repair": _pipelined_repair,
     "sharded_gather": _sharded_gather,
+    "stripe_schedule": _stripe_schedule,
 }
 
 
@@ -122,10 +134,10 @@ def main(argv=None) -> int:
     if args.update_baseline:
         # Merge into the existing baseline: reseeding one section (via
         # --sections) must never drop the other sections' floors.
-        sections = dict(current)
+        old: dict = {}
         if args.baseline.exists():
-            old = json.loads(args.baseline.read_text())
-            sections = {**old.get("sections", {}), **current}
+            old = json.loads(args.baseline.read_text()).get("sections", {})
+        sections = {**old, **current}
         doc = {"tolerance": (args.tolerance if args.tolerance is not None
                              else DEFAULT_TOLERANCE),
                "note": "seeded from a --fast run; regenerate with "
@@ -134,7 +146,15 @@ def main(argv=None) -> int:
                "sections": sections}
         args.baseline.parent.mkdir(parents=True, exist_ok=True)
         args.baseline.write_text(json.dumps(doc, indent=1) + "\n")
+        # Say what happened per section, so a baseline bump in a CI log or
+        # a PR diff is auditable: which floors moved vs merely carried.
+        reseeded = sorted(set(current) & set(old))
+        added = sorted(set(current) - set(old))
+        kept = sorted(set(old) - set(current))
         print(f"baseline written: {args.baseline}")
+        print(f"  re-seeded from current results: {', '.join(reseeded) or '-'}")
+        print(f"  newly added: {', '.join(added) or '-'}")
+        print(f"  kept (merged from old baseline): {', '.join(kept) or '-'}")
         return 0
     if not args.baseline.exists():
         print(f"error: baseline {args.baseline} missing — seed it with "

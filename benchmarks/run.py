@@ -13,6 +13,7 @@ Sections (paper analogue in brackets):
   sharded_repair    repair throughput vs device count        [PR-2 tentpole]
   pipelined_repair  async pipeline vs sync repair overlap    [PR-3 tentpole]
   sharded_gather    per-shard gather scaling x locality cost [PR-4 tentpole]
+  stripe_schedule   locality-aware stripe scheduling uplift  [PR-5 tentpole]
   kernels           encode kernels vs jnp reference          [§V substrate]
   ckpt_stripes      EC-checkpoint encode/repair per arch    [framework]
   roofline          dry-run roofline table                   [deliverable g]
@@ -38,7 +39,7 @@ RESULTS = Path(__file__).resolve().parent / "results"
 SECTIONS = ("repair_costs", "local_portion", "mttdl", "repair_time",
             "blocksize_sweep", "filelevel", "batched_repair",
             "sharded_repair", "pipelined_repair", "sharded_gather",
-            "kernels", "ckpt_stripes", "roofline")
+            "stripe_schedule", "kernels", "ckpt_stripes", "roofline")
 
 
 def main(argv=None) -> int:

@@ -9,7 +9,13 @@ device. ``repro.dist.placement`` names where blocks physically live — a
 ``PlacementMap`` maps (stripe, block) -> (node, shard) with a local/remote
 read cost model — and owns the per-shard gather geometry
 (``shard_layout``/``assemble_shards``) that lands disk reads directly on
-each device's shard.
+each device's shard. ``repro.dist.topology`` makes the placement itself a
+policy: a ``Topology`` (nodes grouped into failure domains) plus pluggable
+block-placement policies (contiguous arcs, per-block round-robin,
+copyset-style spread) generate the maps. ``repro.dist.schedule`` closes the
+loop: it permutes each repair chunk so every stripe lands on the device
+shard whose host owns most of its surviving blocks, never predicting worse
+locality than the contiguous default.
 """
 from .placement import (  # noqa: F401
     GatherShard,
@@ -18,6 +24,11 @@ from .placement import (  # noqa: F401
     assemble_shards,
     plan_gather,
     shard_layout,
+)
+from .schedule import (  # noqa: F401
+    ChunkSchedule,
+    chunk_affinity,
+    schedule_chunk,
 )
 from .sharding import (  # noqa: F401
     MeshRules,
@@ -32,4 +43,10 @@ from .stripes import (  # noqa: F401
     stripe_sharding,
     stripe_span,
     stripe_spec,
+)
+from .topology import (  # noqa: F401
+    POLICIES,
+    Topology,
+    place_stripe,
+    placement_from_topology,
 )

@@ -130,12 +130,21 @@ def shard_layout(shape: Sequence[int], mr: Optional[MeshRules]
                  ) -> Optional[list[ShardSlice]]:
     """Per-device stripe slices for an ``(S, ...)`` batch, global order.
 
-    ``None`` when the batch degrades to a single device (no rules, trivial
-    mesh, or an ``S`` the stripe axis does not divide) — callers keep the
-    one-buffer fast path there. Otherwise the slices partition ``[0, S)``
-    into ``span`` equal contiguous ranges, matching the mesh's
-    ``NamedSharding`` exactly (the launch consumes the assembled array with
-    zero re-transfer).
+    Args:
+        shape: the batched ``(S, |reads|, B)`` gather shape.
+        mr: active mesh + rules, or ``None`` (single-process callers).
+
+    Returns:
+        ``None`` when the batch degrades to a single device (no rules,
+        trivial mesh, or an ``S`` the stripe axis does not divide) —
+        callers keep the one-buffer fast path there. Otherwise a list of
+        :class:`ShardSlice` partitioning ``[0, S)`` into ``span`` equal
+        contiguous ranges in stripe order (``slices[d]`` covers positions
+        ``[d*S/span, (d+1)*S/span)``), matching the mesh's
+        ``NamedSharding`` exactly — the launch consumes the assembled
+        array with zero re-transfer, and the stripe scheduler
+        (``repro.dist.schedule``) relies on this list-position -> slice
+        mapping to assign stripes to shards by permutation.
     """
     shape = tuple(shape)
     if mr is None or stripe_span(shape, mr) <= 1:
@@ -166,13 +175,23 @@ def plan_gather(shape: Sequence[int], mr: Optional[MeshRules], placement
                 ) -> tuple[Optional[list[ShardSlice]], list[GatherShard]]:
     """Shared gather geometry for the stripe store and the repair pipeline.
 
-    Returns ``(layout, parts)``: per-shard preallocated buffers with their
-    stripe ranges and reader-shard attribution. A degraded batch (``layout
-    is None``) gets one full-shape buffer attributed to shard 0 — the
-    single-host gather, charged consistently on both the synchronous and
-    pipelined paths. Sharded batches map device shard *i* onto the
-    placement's host shards contiguously (``PlacementMap.reader_shard``),
-    the same stripe->device order the layout itself uses.
+    Args:
+        shape: the batched ``(S, |reads|, B)`` gather shape.
+        mr: active mesh + rules, or ``None``.
+        placement: the active :class:`PlacementMap` (attributes each
+            shard's reads), or ``None`` to attribute device shard *i* to
+            host shard *i* directly.
+
+    Returns:
+        ``(layout, parts)``: the :func:`shard_layout` result plus one
+        :class:`GatherShard` per buffer — preallocated ``uint8`` buffers
+        with their stripe ranges and reader-shard attribution. A degraded
+        batch (``layout is None``) gets one full-shape buffer attributed
+        to shard 0 — the single-host gather, charged consistently on both
+        the synchronous and pipelined paths. Sharded batches map device
+        shard *i* onto the placement's host shards contiguously
+        (``PlacementMap.reader_shard``), the same stripe->device order the
+        layout itself uses.
     """
     shape = tuple(shape)
     layout = shard_layout(shape, mr)
@@ -193,10 +212,20 @@ def assemble_shards(shape: Sequence[int], mr: MeshRules,
                     bufs: Sequence[np.ndarray]) -> jax.Array:
     """Per-shard host buffers -> one global device array, no host stack.
 
-    Each buffer lands on its slice's device(s) with an independent
-    ``device_put`` (replicated slices are put once per replica device), and
-    the global ``(S, ...)`` array is stitched from the on-device shards —
-    the single-host gather + device-0 bounce the old read path paid is gone.
+    Args:
+        shape: the global ``(S, ...)`` shape being assembled.
+        mr: active mesh + rules (must be the ones ``layout`` derives from).
+        layout: the :func:`shard_layout` slices, in slice order.
+        bufs: one host ``(slice.size, ...)`` buffer per slice, same order.
+
+    Returns:
+        The global ``jax.Array``, sharded exactly as ``stripe_sharding``
+        resolves — ``sharded_launch`` consumes it with zero re-transfer.
+        Each buffer lands on its slice's device(s) with an independent
+        ``device_put`` (replicated slices are put once per replica
+        device), and the global array is stitched from the on-device
+        shards — the single-host gather + device-0 bounce the old read
+        path paid is gone.
     """
     shape = tuple(shape)
     sharding = stripe_sharding(shape, mr)

@@ -41,12 +41,26 @@ def _shard_map(body, mesh, in_specs, out_specs):
 
 
 def stripe_spec(shape, mr: MeshRules) -> P:
-    """PartitionSpec sharding axis 0 (stripes) of an ``(S, ...)`` batch."""
+    """PartitionSpec sharding axis 0 (stripes) of an ``(S, ...)`` batch.
+
+    Args:
+        shape: the batch shape; only ``shape[0]`` (the stripe count S)
+            participates in resolution, trailing dims always replicate.
+        mr: active mesh + rules; the "stripes" logical axis resolves onto
+            its data-parallel axes with divisibility degradation.
+
+    Returns:
+        A spec like ``P(("data",), None, ...)``, or ``P(None, ...)`` when
+        the stripe axis degrades (indivisible S / no candidate axes).
+    """
     names = ("stripes",) + (None,) * (len(shape) - 1)
     return _resolve(shape, names, mr)
 
 
 def stripe_sharding(shape, mr: MeshRules) -> NamedSharding:
+    """:func:`stripe_spec` bound to ``mr``'s mesh as a ``NamedSharding`` —
+    the layout both the sharded launch and the per-shard gather geometry
+    (``repro.dist.placement.shard_layout``) derive from."""
     return NamedSharding(mr.mesh, stripe_spec(shape, mr))
 
 
@@ -76,7 +90,13 @@ def align_stripe_window(window: int, mr: Optional[MeshRules]) -> int:
 
 
 def stripe_span(shape, mr: Optional[MeshRules]) -> int:
-    """How many devices an ``(S, ...)`` batch spreads over (1 = degraded)."""
+    """How many devices an ``(S, ...)`` batch spreads over (1 = degraded).
+
+    Unlike :func:`stripe_axis_span` this accounts for the *batch*: an S the
+    stripe axis does not divide resolves to ``None`` and returns 1. The
+    scheduler (``repro.dist.schedule``) and the gather layout both key off
+    this value, so "will this launch shard?" has one answer everywhere.
+    """
     if mr is None:
         return 1
     entry = stripe_spec(shape, mr)[0] if len(shape) else None

@@ -1,0 +1,201 @@
+"""Topology layer: nodes, failure domains, and block-placement policies.
+
+The paper's repair-time wins assume repair reads come from *nearby*
+survivors; whether they do is decided by **placement policy**, not code
+structure — the lesson of the copyset/failure-domain analysis in *XORing
+Elephants* (Sathiamoorthy et al.) and the locality framing of *Locally
+Repairable Codes* (Papailiopoulos & Dimakis). This module makes that policy
+pluggable:
+
+* :class:`Topology` describes the physical fleet: ``num_nodes`` storage
+  nodes grouped into ``num_domains`` failure domains (racks / hosts).
+  Domains are contiguous equal node ranges — the same node->shard geometry
+  :meth:`~repro.dist.placement.PlacementMap.from_store` derives — so a
+  domain doubles as the *gather shard* that serves a device slice during
+  sharded repair.
+* :func:`place_stripe` maps a stripe's ``n`` blocks onto nodes under one of
+  three policies (:data:`POLICIES`):
+
+  - ``"contiguous"`` — a rotated arc of ``n`` consecutive nodes (the stripe
+    store's seed behavior, stride 7). Every stripe of a pattern group lands
+    on the *same* arc, so repair locality is whatever the arc's overlap
+    with the reading domain happens to be.
+  - ``"round_robin"`` — blocks round-robin across failure domains (classic
+    "one replica per rack"): maximal failure-domain dispersion, which also
+    means every repair read set spreads over ~all domains and no scheduler
+    can make it local.
+  - ``"spread"`` — copyset-style: each stripe picks a small seeded-random
+    set of domains (``spread_width``) and scatters its blocks over their
+    nodes. Bounds the number of distinct copysets (the XORing-Elephants
+    correlated-failure argument) *and* concentrates each stripe's repair
+    reads in few domains — the skewed scenario where locality-aware stripe
+    scheduling (``repro.dist.schedule``) pays.
+
+* :func:`placement_from_topology` turns a topology + a live stripe store
+  into the :class:`~repro.dist.placement.PlacementMap` the repair read
+  stack consumes (node->shard from the domains, block->node from the
+  store's stripe index, remote cost from the store config).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .placement import PlacementMap
+
+# Recognized block-placement policies, in increasing dispersion order of a
+# single stripe's blocks across failure domains: arc < copyset < per-block.
+POLICIES = ("contiguous", "spread", "round_robin")
+
+# The seed stripe store's arc stride: coprime to typical node counts, so
+# consecutive stripes rotate their arcs and parities spread across nodes.
+_ARC_STRIDE = 7
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """A fleet of storage nodes grouped into failure domains.
+
+    Args:
+        num_nodes: total storage nodes (the stripe store's virtual nodes).
+        num_domains: failure domains (racks / hosts). Nodes are assigned to
+            domains in contiguous equal ranges: node ``i`` lives in domain
+            ``i * num_domains // num_nodes`` — the same contiguous geometry
+            the placement layer's default node->shard map uses, so a domain
+            is also the gather shard serving a device slice.
+        spread_width: how many domains the ``"spread"`` policy lets one
+            stripe touch (widened automatically when the chosen domains
+            hold fewer than ``n`` nodes).
+        seed: seeds the ``"spread"`` policy's per-stripe domain choice.
+    """
+    num_nodes: int
+    num_domains: int = 1
+    spread_width: int = 2
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.num_nodes < 1:
+            raise ValueError("topology needs at least one node")
+        if not 1 <= self.num_domains <= self.num_nodes:
+            raise ValueError(
+                f"num_domains must be in [1, {self.num_nodes}], "
+                f"got {self.num_domains}")
+        if self.spread_width < 1:
+            raise ValueError("spread_width must be >= 1")
+
+    def domain_of(self, node: int) -> int:
+        """Failure domain of ``node`` (contiguous equal ranges)."""
+        return node * self.num_domains // self.num_nodes
+
+    def nodes_in(self, domain: int) -> list[int]:
+        """All node ids in ``domain``, ascending."""
+        n, d = self.num_nodes, self.num_domains
+        lo = -(-domain * n // d)            # ceil(domain * n / d)
+        hi = -(-(domain + 1) * n // d)
+        return list(range(lo, hi))
+
+    def shard_of_node(self) -> tuple[int, ...]:
+        """node id -> domain id, as the tuple ``PlacementMap`` consumes."""
+        return tuple(self.domain_of(i) for i in range(self.num_nodes))
+
+
+def place_stripe(policy: str, topo: Topology, sid: int, n: int) -> list[int]:
+    """Place stripe ``sid``'s ``n`` blocks onto nodes under ``policy``.
+
+    Args:
+        policy: one of :data:`POLICIES`.
+        topo: the fleet topology.
+        sid: stripe id (drives rotation / the seeded domain choice).
+        n: blocks per stripe (``k + p + r``).
+
+    Returns:
+        ``n`` distinct node ids, indexed by block. Deterministic in
+        ``(policy, topo, sid, n)`` — re-running a placement is a pure
+        function, so manifests and twin stores reproduce exactly.
+
+    Raises:
+        ValueError: unknown policy, or ``n`` exceeds the available nodes.
+    """
+    if n > topo.num_nodes:
+        raise ValueError(f"cannot place {n} blocks on {topo.num_nodes} nodes")
+    if policy == "contiguous":
+        base = (sid * _ARC_STRIDE) % topo.num_nodes
+        return [(base + i) % topo.num_nodes for i in range(n)]
+    if policy == "round_robin":
+        return _place_round_robin(topo, sid, n)
+    if policy == "spread":
+        return _place_spread(topo, sid, n)
+    raise ValueError(f"unknown placement policy {policy!r} "
+                     f"(choose from {', '.join(POLICIES)})")
+
+
+def _place_round_robin(topo: Topology, sid: int, n: int) -> list[int]:
+    """One block per domain, cycling: block ``b`` -> domain
+    ``(sid + b) % D`` (rotated per stripe), node rotated within the domain.
+    Skips full domains so uneven domain sizes still place ``n`` distinct
+    nodes."""
+    d_count = topo.num_domains
+    pools = [topo.nodes_in(d) for d in range(d_count)]
+    used = [0] * d_count
+    out: list[int] = []
+    for b in range(n):
+        d = (sid + b) % d_count
+        for off in range(d_count):          # first domain with spare nodes
+            dd = (d + off) % d_count
+            if used[dd] < len(pools[dd]):
+                d = dd
+                break
+        nodes = pools[d]
+        out.append(nodes[(sid + used[d]) % len(nodes)])
+        used[d] += 1
+    # used[d] consecutive ring offsets per domain => distinct within the
+    # domain; domains partition nodes => distinct overall.
+    return out
+
+
+def _place_spread(topo: Topology, sid: int, n: int) -> list[int]:
+    """Copyset-style: a seeded per-stripe choice of ``spread_width`` domains
+    (widened until they hold ``n`` nodes), blocks sampled without
+    replacement from their pooled nodes."""
+    rng = np.random.default_rng([topo.seed, sid])
+    order = rng.permutation(topo.num_domains)
+    pool: list[int] = []
+    taken = 0
+    for d in order:
+        pool.extend(topo.nodes_in(int(d)))
+        taken += 1
+        if taken >= topo.spread_width and len(pool) >= n:
+            break
+    sel = rng.choice(len(pool), size=n, replace=False)
+    return [pool[int(i)] for i in sel]
+
+
+def placement_from_topology(store, topo: Topology,
+                            remote_multiplier: Optional[float] = None
+                            ) -> PlacementMap:
+    """The :class:`~repro.dist.placement.PlacementMap` of ``store`` under
+    ``topo``: node->shard from the topology's failure domains, block->node
+    from the store's live stripe index.
+
+    Args:
+        store: a ``repro.ftx.StripeStore`` whose ``num_nodes`` matches the
+            topology.
+        topo: the fleet topology (domains become gather shards).
+        remote_multiplier: simulated link-time cost of a cross-domain read;
+            defaults to ``store.cfg.remote_read_multiplier``.
+
+    Returns:
+        A ``PlacementMap`` resolving ``(sid, block)`` through the store —
+        it tracks placement changes (e.g. spare remapping) live.
+    """
+    if topo.num_nodes != store.num_nodes:
+        raise ValueError(f"topology has {topo.num_nodes} nodes, "
+                         f"store has {store.num_nodes}")
+    if remote_multiplier is None:
+        remote_multiplier = getattr(store.cfg, "remote_read_multiplier", 1.0)
+    return PlacementMap(
+        shard_of_node=topo.shard_of_node(),
+        remote_multiplier=float(remote_multiplier),
+        node_of=lambda sid, b: store.stripes[sid].node_of_block[b])

@@ -120,10 +120,29 @@ class FleetRepairReport:
     local_reads: int = 0
     remote_reads: int = 0
     gather_bytes_per_shard: dict = dataclasses.field(default_factory=dict)
+    # Locality-aware stripe scheduling (repro.dist.schedule): which
+    # stripe->device-shard assignment ran ("locality" or "none") and the
+    # predicted shard-local read fraction it achieved vs. what the
+    # contiguous assignment would have — the scheduler's uplift, observable
+    # per repair. Both are 1.0 when nothing was batched/predicted.
+    schedule: str = "none"
+    scheduled_local_read_fraction: float = 1.0
+    contiguous_local_read_fraction: float = 1.0
 
     @property
     def stripes_per_launch(self) -> float:
         return self.stripes_repaired / max(1, self.launches)
+
+    @property
+    def schedule_uplift(self) -> float:
+        """Scheduled over contiguous predicted local fraction (1.0 = the
+        scheduler found nothing to improve, or scheduling was off; ``inf``
+        when it improved on a contiguous assignment with zero locality)."""
+        if self.contiguous_local_read_fraction <= 0:
+            return 1.0 if self.scheduled_local_read_fraction <= 0 \
+                else float("inf")
+        return (self.scheduled_local_read_fraction
+                / self.contiguous_local_read_fraction)
 
     @property
     def overlap_ratio(self) -> float:
@@ -145,7 +164,8 @@ def repair_failed_nodes(store, nodes: Iterable[int], *,
                         mesh_rules=None,
                         pipeline: Optional[bool] = None,
                         window: Optional[int] = None,
-                        placement=None) -> FleetRepairReport:
+                        placement=None,
+                        schedule: Optional[str] = None) -> FleetRepairReport:
     """Fail ``nodes`` and rebuild every affected stripe in the store.
 
     All stripes whose blocks lived on the failed nodes are grouped by
@@ -162,7 +182,14 @@ def repair_failed_nodes(store, nodes: Iterable[int], *,
     one derived from the node->shard default for the mesh's stripe-axis
     span) drives the per-shard gather and the local/remote read accounting
     reported via ``local_reads``/``remote_reads``/
-    ``gather_bytes_per_shard``. ``revive`` marks the nodes UP again after
+    ``gather_bytes_per_shard``. ``schedule`` (default
+    ``cfg.stripe_schedule``) picks the stripe -> device-shard assignment of
+    each batched chunk: ``"locality"`` (``repro.dist.schedule``) permutes
+    chunks onto the shards owning most of their surviving blocks,
+    bit-identically and never predicted worse than the contiguous
+    ``"none"`` default; the report's ``scheduled_local_read_fraction`` vs
+    ``contiguous_local_read_fraction`` (and ``schedule_uplift``) make the
+    difference observable. ``revive`` marks the nodes UP again after
     the rebuild (blocks were re-materialized in place or onto spares).
     """
     nodes = tuple(nodes)
@@ -171,7 +198,8 @@ def repair_failed_nodes(store, nodes: Iterable[int], *,
     before = store.codec.planner.stats.snapshot()
     tele = store.repair_all(spare_of=spare_of, batched=batched,
                             mesh_rules=mesh_rules, pipeline=pipeline,
-                            window=window, placement=placement)
+                            window=window, placement=placement,
+                            schedule=schedule)
     after = store.codec.planner.stats.snapshot()
     if revive:
         for node in nodes:
@@ -200,4 +228,9 @@ def repair_failed_nodes(store, nodes: Iterable[int], *,
         local_reads=tele.get("local_reads", 0),
         remote_reads=tele.get("remote_reads", 0),
         gather_bytes_per_shard=tele.get("gather_bytes_per_shard", {}),
+        schedule=tele.get("schedule", "none"),
+        scheduled_local_read_fraction=tele.get(
+            "scheduled_local_read_fraction", 1.0),
+        contiguous_local_read_fraction=tele.get(
+            "contiguous_local_read_fraction", 1.0),
     )

@@ -30,6 +30,14 @@ This module overlaps the three stages with a classic double buffer over
 * write-back of window *i*'s rebuilt blocks happens on a dedicated writer
   thread, overlapped with the launch of window *i+1*.
 
+Window creation runs the locality-aware stripe scheduler
+(``repro.dist.schedule``, ``schedule="locality"``): each window's sid list
+is permuted so every stripe lands on the device slice whose serving host
+shard owns the most of its surviving blocks — the per-shard reader pools
+then fetch mostly shard-local blocks with no further changes, since the
+pools follow the window's sid order by construction. Bit-identical (write-
+back is keyed by sid) and never predicted worse than the contiguous order.
+
 Failure injection mid-pipeline is first-class: a node that dies between
 prefetch and launch surfaces as ``IOError`` on the affected read futures,
 and the window *re-plans* — fresh ``_down_blocks`` per stripe, fresh
@@ -102,6 +110,13 @@ class PipelineResult:
     write_seconds: float = 0.0             # sum of write-back spans
     wall_seconds: float = 0.0
     spans: list = dataclasses.field(default_factory=list)  # (stage, win, t0, t1)
+    # Stripe-scheduler predictions (repro.dist.schedule): shard-local reads
+    # under the order the windows actually used vs. the contiguous order,
+    # over schedule_total gather reads. Re-planned sub-windows are excluded
+    # (the slow path repairs in regroup order).
+    scheduled_local: int = 0
+    contiguous_local: int = 0
+    schedule_total: int = 0
 
     @property
     def busy_seconds(self) -> float:
@@ -125,11 +140,17 @@ class RepairPipeline:
                  threads: Optional[int] = None,
                  byte_budget: Optional[int] = None,
                  hook: Optional[PipelineHook] = None,
-                 placement=None):
+                 placement=None, schedule: str = "none"):
         self.store = store
         self.spare_of = spare_of
         self.mesh_rules = mesh_rules
         self.placement = placement
+        # Stripe->device-shard assignment per window ("locality" permutes
+        # each window onto the shards owning its surviving blocks;
+        # repro.dist.schedule). Applied at window creation, before any
+        # prefetch is submitted, so the per-shard reader pools follow the
+        # scheduled order automatically.
+        self.schedule = schedule
         cfg = store.cfg
         self.window = int(window or cfg.pipeline_window or cfg.batch_stripes)
         # Reader width is per gather shard: each simulated host prefetches
@@ -142,8 +163,10 @@ class RepairPipeline:
         self._span_lock = threading.Lock()
 
     # ------------------------------------------------------------- windows
-    def _windows(self, work: Sequence[tuple[list[int], frozenset[int], object]]
-                 ) -> list[RepairWindow]:
+    def _windows(self, work: Sequence[tuple[list[int], frozenset[int], object]],
+                 res: PipelineResult) -> list[RepairWindow]:
+        from repro.dist.schedule import schedule_chunk
+
         from .stripestore import launch_step
 
         cfg = self.store.cfg
@@ -154,8 +177,13 @@ class RepairPipeline:
                                   else {"byte_budget": self.byte_budget}))
             step = align_stripe_window(step, self.mesh_rules)
             for lo in range(0, len(sids), step):
-                out.append(RepairWindow(len(out), tuple(sids[lo:lo + step]),
-                                        down, compiled))
+                cs = schedule_chunk(sids[lo:lo + step], compiled.reads,
+                                    self.placement, self.mesh_rules,
+                                    self.schedule)
+                res.scheduled_local += cs.scheduled_local
+                res.contiguous_local += cs.contiguous_local
+                res.schedule_total += cs.total_reads
+                out.append(RepairWindow(len(out), cs.sids, down, compiled))
         return out
 
     # ------------------------------------------------------------- stages
@@ -286,7 +314,7 @@ class RepairPipeline:
         for three consecutive windows run concurrently.
         """
         res = PipelineResult()
-        windows = self._windows(work)
+        windows = self._windows(work, res)
         res.windows = len(windows)
         if not windows:
             return res

@@ -75,6 +75,19 @@ class StoreConfig:
     #                                    whose source node lives outside the
     #                                    reading shard (PlacementMap); 1.0
     #                                    keeps the locality-blind model
+    placement_policy: str = "contiguous"  # block-placement policy at stripe
+    #                                    open (repro.dist.topology.POLICIES):
+    #                                    contiguous arcs (seed behavior),
+    #                                    round_robin across domains, or
+    #                                    copyset-style spread
+    stripe_schedule: str = "locality"  # stripe->device-shard assignment for
+    #                                    sharded repair launches
+    #                                    (repro.dist.schedule): "locality"
+    #                                    permutes each chunk onto the shards
+    #                                    owning most of its surviving blocks
+    #                                    (never predicted worse than
+    #                                    contiguous); "none" keeps the
+    #                                    contiguous default
 
 
 @dataclasses.dataclass
@@ -130,12 +143,20 @@ class Telemetry:
 
 class StripeStore:
     def __init__(self, root: str | Path, cfg: StoreConfig,
-                 num_nodes: Optional[int] = None, placement=None):
+                 num_nodes: Optional[int] = None, placement=None,
+                 topology=None):
+        from repro.dist.topology import (POLICIES, Topology,
+                                         placement_from_topology)
+
         self.cfg = cfg
-        # Default PlacementMap for repairs (repro.dist.placement); None
-        # derives one per repair from the node->shard default and the
-        # active mesh's stripe-axis span.
-        self.placement = placement
+        if cfg.placement_policy not in POLICIES:
+            raise ValueError(f"unknown placement_policy "
+                             f"{cfg.placement_policy!r} "
+                             f"(choose from {', '.join(POLICIES)})")
+        if cfg.stripe_schedule not in ("none", "locality"):
+            raise ValueError(f"unknown stripe_schedule "
+                             f"{cfg.stripe_schedule!r} "
+                             f"(choose from none, locality)")
         self.scheme = make_scheme(cfg.scheme, cfg.k, cfg.r, cfg.p)
         self.codec = StripeCodec(self.scheme, backend=cfg.backend)
         # Batched executor sharing the codec's plan cache: fleet repair
@@ -147,6 +168,27 @@ class StripeStore:
         self.num_nodes = num_nodes or self.n
         if self.num_nodes < self.n:
             raise ValueError("need at least n nodes for one stripe")
+        # Fleet topology (repro.dist.topology): failure domains plus the
+        # block-placement policy _open() consults. The single-domain
+        # default with the "contiguous" policy reproduces the seed store's
+        # stride-7 arcs exactly.
+        self.topology = topology if topology is not None \
+            else Topology(num_nodes=self.num_nodes)
+        # Whether a topology was supplied (vs the inert single-domain
+        # default): decides placement derivation and manifest persistence,
+        # so a reloaded store keeps placing stripes under the original
+        # domains instead of silently reverting to the default.
+        self._topology_explicit = topology is not None
+        if self.topology.num_nodes != self.num_nodes:
+            raise ValueError(f"topology has {self.topology.num_nodes} "
+                             f"nodes, store has {self.num_nodes}")
+        # Default PlacementMap for repairs (repro.dist.placement): an
+        # explicit map wins; a topology derives one (domains = gather
+        # shards); None derives one per repair from the node->shard
+        # default and the active mesh's stripe-axis span.
+        if placement is None and topology is not None:
+            placement = placement_from_topology(self, self.topology)
+        self.placement = placement
         self.nodes = {i: NodeState.UP for i in range(self.num_nodes)}
         self.latency_ms = {
             i: float(l) for i, l in enumerate(
@@ -246,11 +288,15 @@ class StripeStore:
             cur_key = cur_key + "#cont"
 
     def _open(self) -> None:
+        from repro.dist.topology import place_stripe
+
         sid = self._next_sid
         self._next_sid += 1
-        # round-robin placement with stride so parities spread across nodes
-        base = (sid * 7) % self.num_nodes
-        placement = [(base + i) % self.num_nodes for i in range(self.n)]
+        # Block placement is policy-driven (repro.dist.topology): the
+        # default "contiguous" policy is the seed behavior — a stride-7
+        # rotated arc, so parities spread across nodes.
+        placement = place_stripe(self.cfg.placement_policy, self.topology,
+                                 sid, self.n)
         self.stripes[sid] = Stripe(sid=sid, node_of_block=placement)
         self._open_sid = sid
         self._open_fill = 0
@@ -369,7 +415,8 @@ class StripeStore:
                    batched: bool = True, mesh_rules=None,
                    pipeline: Optional[bool] = None,
                    window: Optional[int] = None,
-                   pipeline_hook=None, placement=None) -> dict:
+                   pipeline_hook=None, placement=None,
+                   schedule: Optional[str] = None) -> dict:
         """Rebuild every block resident on DOWN nodes onto spares (or back in
         place) using the multi-node planner. Returns telemetry for the repair
         (the paper's repair-time experiments).
@@ -407,8 +454,23 @@ class StripeStore:
         no single-host stack exists — and every read is charged local or
         remote against the placement's locality cost model
         (``local_reads``/``remote_reads``/``gather_bytes_per_shard``).
+
+        ``schedule`` (default ``cfg.stripe_schedule``) picks the stripe ->
+        device-shard assignment of each batched chunk
+        (``repro.dist.schedule``): ``"locality"`` permutes the chunk so
+        every stripe lands on the device slice whose serving host shard
+        owns the most of its surviving blocks (greedy cost-model argmax,
+        kept only when it beats the contiguous assignment — the predicted
+        local-read fraction never drops); ``"none"`` keeps the contiguous
+        default. Bit-identical either way: write-back is keyed by stripe
+        id, so a permutation changes which shard reads which bytes, never
+        the bytes. The telemetry reports both predictions
+        (``scheduled_local_read_fraction`` vs
+        ``contiguous_local_read_fraction``) so the scheduler's uplift is
+        observable in every repair.
         """
         from repro.dist.placement import PlacementMap
+        from repro.dist.schedule import schedule_chunk
         from repro.dist.sharding import current_rules
         from repro.dist.stripes import stripe_axis_span
 
@@ -418,6 +480,11 @@ class StripeStore:
         if placement is None:
             placement = PlacementMap.from_store(
                 self, num_shards=max(1, stripe_axis_span(mr)))
+        if schedule is None:
+            schedule = self.cfg.stripe_schedule
+        if schedule not in ("none", "locality"):
+            raise ValueError(f"unknown stripe schedule {schedule!r} "
+                             f"(choose from none, locality)")
         use_pipeline = batched and (pipeline if pipeline is not None
                                     else self.cfg.pipeline_window > 0)
         before = self.telemetry.copy()
@@ -432,6 +499,10 @@ class StripeStore:
         device_launches = 0
         windows = 0
         replans = 0
+        # Stripe-scheduler prediction accumulators: local reads the chosen
+        # order will serve shard-locally vs. what the contiguous order
+        # would have, over the same total (repro.dist.schedule).
+        sched_local = contig_local = sched_total = 0
         # Planning stops at the first unrecoverable pattern, but groups
         # sorted before it still repair (matching the seed's loop order):
         # a mixed-failure fleet rebuilds everything it can before raising.
@@ -463,13 +534,16 @@ class StripeStore:
             res = RepairPipeline(
                 self, spare_of=spare_of, mesh_rules=mr, window=window,
                 byte_budget=_BATCH_BYTE_BUDGET, hook=pipeline_hook,
-                placement=placement,
+                placement=placement, schedule=schedule,
             ).run(work)
             launches += res.launches
             devices = max(devices, res.devices)
             device_launches += res.device_launches
             windows = res.windows
             replans = res.replans
+            sched_local += res.scheduled_local
+            contig_local += res.contiguous_local
+            sched_total += res.schedule_total
             with self._tele_lock:
                 self.telemetry.read_seconds += res.read_seconds
                 self.telemetry.compute_seconds += res.compute_seconds
@@ -481,7 +555,12 @@ class StripeStore:
                 # host-memory transient.
                 step = launch_step(self.cfg, len(compiled.reads), window)
                 for lo in range(0, len(sids), step):
-                    span = self._repair_group(sids[lo:lo + step], down,
+                    cs = schedule_chunk(sids[lo:lo + step], compiled.reads,
+                                        placement, mr, schedule)
+                    sched_local += cs.scheduled_local
+                    contig_local += cs.contiguous_local
+                    sched_total += cs.total_reads
+                    span = self._repair_group(list(cs.sids), down,
                                               compiled, spare_of, mr,
                                               placement)
                     launches += 1
@@ -522,6 +601,14 @@ class StripeStore:
             "local_reads": t.local_reads - before.local_reads,
             "remote_reads": t.remote_reads - before.remote_reads,
             "gather_bytes_per_shard": gather_shards,
+            "schedule": schedule if batched else "none",
+            "scheduled_local_reads": sched_local,
+            "contiguous_local_reads": contig_local,
+            "schedule_total_reads": sched_total,
+            "scheduled_local_read_fraction":
+                sched_local / sched_total if sched_total else 1.0,
+            "contiguous_local_read_fraction":
+                contig_local / sched_total if sched_total else 1.0,
         }
 
     def _gather_group(self, sids: list[int], reads: tuple[int, ...],
@@ -610,6 +697,11 @@ class StripeStore:
     def save_manifest(self) -> None:
         manifest = {
             "cfg": dataclasses.asdict(self.cfg),
+            # An explicit topology round-trips (its policies place future
+            # stripes); the inert default is omitted so plain stores keep
+            # the seed manifest shape and load-time placement derivation.
+            "topology": dataclasses.asdict(self.topology)
+            if self._topology_explicit else None,
             "stripes": {str(s.sid): s.node_of_block
                         for s in self.stripes.values()},
             "objects": {k: dataclasses.asdict(m)
@@ -619,12 +711,17 @@ class StripeStore:
 
     @classmethod
     def load(cls, root: str | Path) -> "StripeStore":
+        from repro.dist.topology import Topology
+
         root = Path(root)
         manifest = json.loads((root / "manifest.json").read_text())
         cfg = StoreConfig(**manifest["cfg"])
-        store = cls(root, cfg, num_nodes=max(
-            max(v) for v in manifest["stripes"].values()) + 1
-            if manifest["stripes"] else None)
+        topo_doc = manifest.get("topology")
+        topology = Topology(**topo_doc) if topo_doc else None
+        store = cls(root, cfg, num_nodes=topology.num_nodes if topology
+                    else max(max(v) for v in manifest["stripes"].values()) + 1
+                    if manifest["stripes"] else None,
+                    topology=topology)
         for sid, placement in manifest["stripes"].items():
             store.stripes[int(sid)] = Stripe(sid=int(sid),
                                              node_of_block=list(placement))
