@@ -25,8 +25,16 @@ from typing import Optional, Sequence
 import numpy as np
 
 from .gf import gf_solve_any
-from .repair import MultiRepairPlan, RepairPlan, multi_repair_plan, single_repair_plan
+from .repair import (MultiRepairPlan, RepairPlan, multi_repair_plan,
+                     single_repair_candidates, single_repair_plan)
 from .schemes import LRCScheme
+
+# Serving-path preference order over single-block repair methods: the
+# paper's degraded-read argument is local group first (g reads), the
+# cascaded group only when the local group is insufficient, and the k-read
+# global decode strictly last. "recompute" (a parity from its own group's
+# items) is a local-group operation too.
+_SERVE_METHOD_RANK = {"group": 0, "recompute": 0, "cascade": 1, "global": 2}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -174,6 +182,46 @@ class RepairPlanner:
                     f"cannot reconstruct block {e.target} from {sorted(reads)}"
                 ) from None
         return self._get(("multi", failed), build)
+
+    def serving_plan(self, block: int, down) -> CompiledPlan:
+        """Cheapest feasible plan to serve one lost block under a down-set.
+
+        The degraded-read planner: among the structural single-block repair
+        candidates whose sources are all alive, pick the local-group option
+        first, the cascaded-group option next, a global recompute last
+        (``_SERVE_METHOD_RANK``), cheapest within each tier. When no
+        single-block candidate survives the down-set, fall back to the
+        flattened multi-node plan for the whole pattern — its targets
+        include ``block`` (and every other lost block, which serving caches
+        for free). Cached under ``("serve", block, down)`` so a fleet of
+        concurrent readers of one hot lost block compiles the GF solve
+        exactly once.
+
+        Raises ``RuntimeError`` when the pattern is not decodable.
+        """
+        down = frozenset(down)
+        if block not in down:
+            raise ValueError(f"block {block} is not in the down-set "
+                             f"{sorted(down)}")
+
+        def build() -> CompiledPlan:
+            cands = [c for c in single_repair_candidates(self.scheme, block)
+                     if not (c.reads & down)]
+            for cand in sorted(cands, key=lambda c: (
+                    _SERVE_METHOD_RANK[c.method], c.cost)):
+                reads = tuple(sorted(cand.reads))
+                try:
+                    return dataclasses.replace(
+                        self._solve_many("single", (block,), reads),
+                        meta=cand)
+                except _Unsolvable:
+                    continue
+            # No single-block candidate survives this down-set: the whole
+            # pattern decodes (or fails) through the multi-node plan, which
+            # has its own cache entry — the serve key just aliases it.
+            return self.multi_plan(down)
+
+        return self._get(("serve", block, down), build)
 
     def decode_plan(self, available) -> CompiledPlan:
         """Compiled full decode: the k data blocks from any rank-k read set."""

@@ -8,5 +8,6 @@ instead of k-block global reads.
 from .stripestore import NodeState, StripeStore, StoreConfig  # noqa: F401
 from .checkpoint import CheckpointManager  # noqa: F401
 from .failures import FailureInjector  # noqa: F401
-from .fleet import FleetRepairReport, repair_failed_nodes  # noqa: F401
+from .fleet import (DegradedReadReport, FleetRepairReport,  # noqa: F401
+                    read_report, repair_failed_nodes)
 from .pipeline import PipelineResult, RepairPipeline  # noqa: F401

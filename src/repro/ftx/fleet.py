@@ -157,6 +157,97 @@ class FleetRepairReport:
         return self.local_reads / total if total else 1.0
 
 
+@dataclasses.dataclass(frozen=True)
+class DegradedReadReport:
+    """What the degraded-read serving path did, fleet-wide.
+
+    The serving-side sibling of :class:`FleetRepairReport`: built from the
+    store's serving counters (``StripeStore.read``/``read_range``) plus the
+    read-latency reservoir, by :func:`read_report`. All counters are exact;
+    the latency quantiles cover the recorder's retained window.
+    """
+    direct_reads: int           # requests served straight from live blocks
+    degraded_reads: int         # requests that landed on a lost block
+    coalesced_reads: int        # degraded requests served by another
+    #                             request's in-flight decode
+    decode_launches: int        # engine launches the serving path issued
+    local_decodes: int          # ... with a local (group/cascade) plan
+    global_decodes: int         # ... that fell back to a global decode
+    replans: int                # decodes re-planned after a source died
+    cache_hits: int
+    cache_misses: int
+    cache_invalidations: int    # hot entries dropped by repair/write-back
+    served_bytes: int           # payload bytes returned to clients
+    blocks_read: int            # source blocks fetched (all paths)
+    bytes_read: int
+    latency: dict               # count/bytes/p50_ms/p99_ms/mean_ms/max_ms
+
+    @property
+    def coalescing_ratio(self) -> float:
+        """Degraded requests per decode launch: how many reads each launch
+        amortized over (1.0 = naive per-request decode; cache hits and
+        coalesced waiters both push this up)."""
+        return self.degraded_reads / max(1, self.decode_launches)
+
+    @property
+    def cache_hit_rate(self) -> float:
+        lookups = self.cache_hits + self.cache_misses
+        return self.cache_hits / lookups if lookups else 0.0
+
+    @property
+    def local_decode_fraction(self) -> float:
+        """Fraction of serving decodes satisfied without a global decode —
+        the paper's low-bandwidth degraded-read claim, counted."""
+        total = self.local_decodes + self.global_decodes
+        return self.local_decodes / total if total else 1.0
+
+    @property
+    def p50_ms(self) -> float:
+        return self.latency.get("p50_ms", 0.0)
+
+    @property
+    def p99_ms(self) -> float:
+        return self.latency.get("p99_ms", 0.0)
+
+
+def read_report(store, *, reset: bool = False) -> DegradedReadReport:
+    """Snapshot the store's degraded-read serving telemetry.
+
+    ``reset=True`` also zeroes the serving counters and the latency window
+    (repair/locality telemetry is left untouched), so per-scenario load
+    generators can diff cleanly.
+    """
+    t = store.telemetry
+    with store._tele_lock:
+        snap = t.copy()
+    latency = (store.read_latency.reset() if reset
+               else store.read_latency.snapshot())
+    if reset:
+        with store._tele_lock:
+            t.direct_reads = t.degraded_reads = t.coalesced_reads = 0
+            t.serve_decode_launches = 0
+            t.serve_local_decodes = t.serve_global_decodes = 0
+            t.serve_replans = 0
+            t.cache_hits = t.cache_misses = t.cache_invalidations = 0
+            t.served_bytes = 0
+    return DegradedReadReport(
+        direct_reads=snap.direct_reads,
+        degraded_reads=snap.degraded_reads,
+        coalesced_reads=snap.coalesced_reads,
+        decode_launches=snap.serve_decode_launches,
+        local_decodes=snap.serve_local_decodes,
+        global_decodes=snap.serve_global_decodes,
+        replans=snap.serve_replans,
+        cache_hits=snap.cache_hits,
+        cache_misses=snap.cache_misses,
+        cache_invalidations=snap.cache_invalidations,
+        served_bytes=snap.served_bytes,
+        blocks_read=snap.blocks_read,
+        bytes_read=snap.bytes_read,
+        latency=latency,
+    )
+
+
 def repair_failed_nodes(store, nodes: Iterable[int], *,
                         spare_of: Optional[dict[int, int]] = None,
                         revive: bool = True,

@@ -20,6 +20,7 @@ import enum
 import json
 import threading
 import time
+from collections import OrderedDict
 from pathlib import Path
 from typing import Iterable, Optional
 
@@ -27,8 +28,10 @@ import numpy as np
 
 from repro.core.codec import StripeCodec
 from repro.core.engine import BatchedCodecEngine
-from repro.core.repair import multi_repair_plan, single_repair_plan
+from repro.core.repair import (MultiRepairPlan, multi_repair_plan,
+                               single_repair_plan)
 from repro.core.schemes import make_scheme
+from repro.serve.telemetry import LatencyRecorder
 
 
 class NodeState(enum.Enum):
@@ -88,6 +91,17 @@ class StoreConfig:
     #                                    (never predicted worse than
     #                                    contiguous); "none" keeps the
     #                                    contiguous default
+    read_cache_blocks: int = 64        # hot-block reconstruction cache: max
+    #                                    reconstructed blocks kept for the
+    #                                    degraded serving path (LRU;
+    #                                    0 disables caching entirely)
+    coalesce_reads: bool = True        # merge concurrent degraded reads of
+    #                                    one lost block into a single decode
+    #                                    launch (per-block in-flight future);
+    #                                    False = naive per-request decode
+    #                                    (the benchmark baseline)
+    read_latency_samples: int = 8192   # bounded reservoir behind the read
+    #                                    path's p50/p99 latency telemetry
 
 
 @dataclasses.dataclass
@@ -124,6 +138,22 @@ class Telemetry:
     local_reads: int = 0
     remote_reads: int = 0
     gather_bytes_per_shard: dict = dataclasses.field(default_factory=dict)
+    # Degraded-read serving path (read/read_range): requests served straight
+    # from live blocks vs. reconstructed inline; how many of the degraded
+    # ones piggybacked on another request's in-flight decode (coalescing) or
+    # on the hot-block cache; how many decode launches actually reached the
+    # engine and whether their plans were local (group/cascade) or global.
+    direct_reads: int = 0
+    degraded_reads: int = 0
+    coalesced_reads: int = 0
+    serve_decode_launches: int = 0
+    serve_local_decodes: int = 0
+    serve_global_decodes: int = 0
+    serve_replans: int = 0            # decodes re-planned after a source died
+    cache_hits: int = 0
+    cache_misses: int = 0
+    cache_invalidations: int = 0      # entries dropped by repair/write-back
+    served_bytes: int = 0             # payload bytes returned to read clients
 
     def copy(self) -> "Telemetry":
         snap = dataclasses.replace(self)
@@ -138,7 +168,27 @@ class Telemetry:
         self.read_seconds = self.compute_seconds = self.write_seconds = 0.0
         self.local_reads = self.remote_reads = 0
         self.gather_bytes_per_shard = {}
+        self.direct_reads = self.degraded_reads = self.coalesced_reads = 0
+        self.serve_decode_launches = 0
+        self.serve_local_decodes = self.serve_global_decodes = 0
+        self.serve_replans = 0
+        self.cache_hits = self.cache_misses = self.cache_invalidations = 0
+        self.served_bytes = 0
         return snap
+
+
+class _InflightDecode:
+    """One lost block's in-flight reconstruction: the request coalescing
+    unit. The first degraded reader of a (stripe, block) becomes the leader
+    and decodes; every concurrent reader of the same block parks on the
+    event and is served from ``result`` — N requests, one decode launch."""
+    __slots__ = ("event", "result", "error", "waiters")
+
+    def __init__(self):
+        self.event = threading.Event()
+        self.result: Optional[np.ndarray] = None
+        self.error: Optional[BaseException] = None
+        self.waiters = 0
 
 
 class StripeStore:
@@ -200,6 +250,20 @@ class StripeStore:
         self.stripes: dict[int, Stripe] = {}
         self.objects: dict[str, ObjectMeta] = {}
         self.telemetry = Telemetry()
+        # Degraded-read serving state (read/read_range): the per-block
+        # in-flight futures behind request coalescing, the bounded LRU
+        # hot-block reconstruction cache, and the latency reservoir for
+        # p50/p99 read telemetry. One lock serializes cache/in-flight
+        # bookkeeping; decodes themselves run outside it.
+        self._serve_lock = threading.Lock()
+        self._inflight: dict[tuple[int, int], _InflightDecode] = {}
+        self._hot_cache: OrderedDict[tuple[int, int], np.ndarray] = \
+            OrderedDict()
+        self.read_latency = LatencyRecorder(cfg.read_latency_samples)
+        # Diagnostic callback ``(stage, sid, block)`` with stages "plan",
+        # "gather", "decode" — the serving-path analogue of pipeline_hook,
+        # used by the coalescing and mid-read failure-injection tests.
+        self.read_hook = None
         self._next_sid = 0
         self._open_sid: Optional[int] = None
         self._open_fill = 0
@@ -253,6 +317,36 @@ class StripeStore:
     def _write_block(self, sid: int, block: int, data: np.ndarray) -> None:
         path = self._block_path(sid, block)
         np.asarray(data, np.uint8).tofile(path)
+        # Cache-invalidation-on-write-back: the disk copy is now the truth,
+        # so a cached reconstruction of this block must never be served
+        # again (it is byte-identical today, but a future overwrite path
+        # must not inherit a stale entry — DESIGN.md §10).
+        self._cache_invalidate(sid, block)
+
+    # ------------------------------------------------- hot-block cache
+    def _cache_invalidate(self, sid: int, block: int) -> None:
+        with self._serve_lock:
+            dropped = self._hot_cache.pop((sid, block), None)
+        if dropped is not None:
+            with self._tele_lock:
+                self.telemetry.cache_invalidations += 1
+
+    def _cache_put(self, sid: int, block: int, data: np.ndarray) -> None:
+        cap = self.cfg.read_cache_blocks
+        if cap <= 0:
+            return
+        with self._serve_lock:
+            self._hot_cache[(sid, block)] = data
+            self._hot_cache.move_to_end((sid, block))
+            while len(self._hot_cache) > cap:
+                self._hot_cache.popitem(last=False)
+
+    def _cache_get(self, sid: int, block: int) -> Optional[np.ndarray]:
+        with self._serve_lock:
+            data = self._hot_cache.get((sid, block))
+            if data is not None:
+                self._hot_cache.move_to_end((sid, block))
+        return data
 
     # ------------------------------------------------------------- writes
     def put(self, key: str, payload: bytes | np.ndarray) -> ObjectMeta:
@@ -360,6 +454,13 @@ class StripeStore:
         down = self._down_blocks(sid)
         if block not in down:
             return self._read_block(sid, block, (lo, hi))
+        # A hot reconstruction from the serving path covers this range for
+        # free (no disk reads at all beats §V-C's minimal byte ranges).
+        cached = self._cache_get(sid, block)
+        if cached is not None:
+            with self._tele_lock:
+                self.telemetry.cache_hits += 1
+            return cached[lo:hi].copy()
         # degraded read: plan repair for just this block, fetch only [lo, hi)
         plan = self._pick_single_plan(sid, block, down)
         if plan is None:                      # plan sources dead -> multi plan
@@ -403,6 +504,180 @@ class StripeStore:
 
         pool = sorted(cands, key=sim_time)[:1 + self.cfg.hedge]
         return pool[0]
+
+    # ------------------------------------------------------------- serving
+    def read(self, sid: int, block: int) -> np.ndarray:
+        """Serve one block of one stripe, reconstructing inline if lost.
+
+        The degraded-read serving path (DESIGN.md §10): live blocks are
+        read straight from their node; a block on a DOWN node is rebuilt
+        through the planner's cheapest feasible plan (local group first,
+        cascaded group as fallback, global decode last —
+        ``RepairPlanner.serving_plan``) in a single
+        :class:`BatchedCodecEngine` launch. Concurrent reads of one lost
+        block coalesce onto a single in-flight decode
+        (``cfg.coalesce_reads``), reconstructions are kept in a bounded
+        hot-block LRU (``cfg.read_cache_blocks``, invalidated whenever the
+        block is written back), and every request's wall latency lands in
+        ``read_latency`` (p50/p99 telemetry).
+
+        Raises ``KeyError``/``IndexError`` for unknown stripes/blocks and
+        ``IOError`` when the stripe's failure pattern is unrecoverable.
+        """
+        return self.read_range(sid, block, 0, self.cfg.block_size)
+
+    def read_range(self, sid: int, block: int, lo: int = 0,
+                   hi: Optional[int] = None) -> np.ndarray:
+        """``read`` restricted to the byte range ``[lo, hi)`` of the block.
+
+        Live blocks read only the range from disk (the §V-C byte-range
+        optimization); lost blocks are reconstructed whole — the unit of
+        coalescing and caching — and sliced, so N range reads of one hot
+        lost block still cost one decode launch.
+        """
+        t0 = time.perf_counter()
+        if sid not in self.stripes:
+            raise KeyError(f"unknown stripe {sid}")
+        if not 0 <= block < self.n:
+            raise IndexError(f"block {block} out of range for n={self.n}")
+        hi = self.cfg.block_size if hi is None else hi
+        if not 0 <= lo <= hi <= self.cfg.block_size:
+            raise ValueError(f"bad byte range [{lo}, {hi}) for block size "
+                             f"{self.cfg.block_size}")
+        if block not in self._down_blocks(sid):
+            try:
+                data = self._read_block(sid, block, (lo, hi))
+            except IOError:
+                # The node died between the down-set check and the read:
+                # take the degraded path with a fresh down-set.
+                data = self._read_degraded(sid, block)[lo:hi].copy()
+                self._account_read(t0, lo, hi, degraded=True)
+                return data
+            self._account_read(t0, lo, hi, degraded=False)
+            return data
+        data = self._read_degraded(sid, block)[lo:hi].copy()
+        self._account_read(t0, lo, hi, degraded=True)
+        return data
+
+    def _account_read(self, t0: float, lo: int, hi: int, *,
+                      degraded: bool) -> None:
+        with self._tele_lock:
+            if degraded:
+                self.telemetry.degraded_reads += 1
+            else:
+                self.telemetry.direct_reads += 1
+            self.telemetry.served_bytes += hi - lo
+        self.read_latency.record(time.perf_counter() - t0, hi - lo)
+
+    def _read_degraded(self, sid: int, block: int) -> np.ndarray:
+        """Serve a lost block: cache, then coalesce, then lead a decode.
+
+        The cache probe and the in-flight registration happen under one
+        lock acquisition, so there is no window in which a block is neither
+        cached nor in flight while a decode for it is running: the leader
+        inserts the reconstruction into the cache *before* retiring its
+        in-flight entry.
+        """
+        key = (sid, block)
+        coalesce = self.cfg.coalesce_reads
+        leader = False
+        entry: Optional[_InflightDecode] = None
+        with self._serve_lock:
+            cached = self._hot_cache.get(key)
+            if cached is not None:
+                self._hot_cache.move_to_end(key)
+            elif coalesce:
+                entry = self._inflight.get(key)
+                if entry is None:
+                    entry = _InflightDecode()
+                    self._inflight[key] = entry
+                    leader = True
+                else:
+                    entry.waiters += 1
+        if cached is not None:
+            with self._tele_lock:
+                self.telemetry.cache_hits += 1
+            return cached
+        with self._tele_lock:
+            self.telemetry.cache_misses += 1
+        if entry is not None and not leader:
+            entry.event.wait()
+            with self._tele_lock:
+                self.telemetry.coalesced_reads += 1
+            if entry.error is not None:
+                raise entry.error
+            return entry.result
+        try:
+            data = self._decode_block(sid, block)
+            if leader:
+                entry.result = data
+            return data
+        except BaseException as e:
+            if leader:
+                entry.error = e
+            raise
+        finally:
+            if leader:
+                # Retire the future only after the cache holds the result
+                # (or the error is recorded): late readers either hit the
+                # cache or start a fresh decode — never a stale future.
+                with self._serve_lock:
+                    self._inflight.pop(key, None)
+                entry.event.set()
+
+    def _decode_block(self, sid: int, block: int) -> np.ndarray:
+        """One serving-path reconstruction: plan, gather, single launch.
+
+        A source node dying between plan selection and gather surfaces as
+        an IOError on the read; the loop re-plans against the fresh
+        down-set (``serve_replans`` counts these) until a feasible plan's
+        sources all survive the gather, or the pattern goes unrecoverable.
+        """
+        attempts = 0
+        while True:
+            down = self._down_blocks(sid)
+            if self.read_hook:
+                self.read_hook("plan", sid, block)
+            try:
+                plan = self.engine.planner.serving_plan(block, down)
+            except RuntimeError:
+                raise IOError(f"stripe {sid}: block {block} unrecoverable "
+                              f"({sorted(down)})") from None
+            if self.read_hook:
+                self.read_hook("gather", sid, block)
+            try:
+                stacked = np.stack(
+                    [self._read_block(sid, b) for b in plan.reads])[None]
+            except IOError:
+                attempts += 1
+                with self._tele_lock:
+                    self.telemetry.serve_replans += 1
+                if attempts > self.n:
+                    raise
+                continue
+            if self.read_hook:
+                self.read_hook("decode", sid, block)
+            out = np.asarray(self.engine.execute(plan, stacked))
+            meta = plan.meta
+            local = (meta.all_local if isinstance(meta, MultiRepairPlan)
+                     else meta is not None and meta.method != "global")
+            with self._tele_lock:
+                self.telemetry.serve_decode_launches += 1
+                if local:
+                    self.telemetry.serve_local_decodes += 1
+                else:
+                    self.telemetry.serve_global_decodes += 1
+            # The multi-plan fallback rebuilds the stripe's whole failure
+            # pattern in the same launch; cache every target so sibling
+            # lost blocks serve for free.
+            result = None
+            for t, b in enumerate(plan.targets):
+                rebuilt = out[0, t, :]
+                self._cache_put(sid, b, rebuilt)
+                if b == block:
+                    result = rebuilt
+            assert result is not None, "plan targets must include the block"
+            return result
 
     # ------------------------------------------------------------- repair
     def fail_node(self, node: int) -> None:

@@ -1,2 +1,23 @@
-"""Serving substrate: KV-cache engine with continuous batching."""
-from .engine import Request, ServeEngine  # noqa: F401
+"""Serving substrate: the continuous-batching LLM engine and the degraded
+block-read front end over erasure-coded stripe stores.
+
+Attribute access is lazy (PEP 562): ``repro.serve.telemetry`` is imported
+by the stripe store's hot read path, and must not drag the model stack
+(``repro.serve.engine`` -> ``repro.models``) in with it.
+"""
+_LAZY = {
+    "Request": "engine", "ServeEngine": "engine",
+    "BlockServer": "blocks", "zipf_requests": "blocks",
+    "LatencyRecorder": "telemetry",
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+
+        mod = importlib.import_module(f".{_LAZY[name]}", __name__)
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import time
 from collections import deque
 from typing import Optional
 
@@ -26,6 +27,8 @@ import numpy as np
 from repro.models import blocks
 from repro.models.registry import ModelApi
 
+from .telemetry import LatencyRecorder
+
 
 @dataclasses.dataclass
 class Request:
@@ -35,6 +38,7 @@ class Request:
     eos_id: Optional[int] = None
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
+    submitted_at: float = 0.0   # perf_counter at submit; feeds latency p50/p99
 
 
 class ServeEngine:
@@ -53,6 +57,10 @@ class ServeEngine:
         self._rid = itertools.count()
         self._decode = jax.jit(api.decode_step)
         self._prefill = jax.jit(api.prefill)
+        # Submit-to-completion wall latency per request — the same recorder
+        # (and so the same p50/p99 meaning) as the degraded block-read
+        # serving path (repro.serve.telemetry).
+        self.latency = LatencyRecorder()
 
     def load(self, params) -> None:
         self.params = params
@@ -62,7 +70,8 @@ class ServeEngine:
     def submit(self, prompt: np.ndarray, max_new: int = 16,
                eos_id: Optional[int] = None) -> Request:
         req = Request(rid=next(self._rid), prompt=np.asarray(prompt, np.int32),
-                      max_new=max_new, eos_id=eos_id)
+                      max_new=max_new, eos_id=eos_id,
+                      submitted_at=time.perf_counter())
         self.queue.append(req)
         return req
 
@@ -109,7 +118,13 @@ class ServeEngine:
                     or self.lengths[i] >= self.max_len - 1):
                 req.done = True
                 self.slots[i] = None
+                self.latency.record(time.perf_counter() - req.submitted_at,
+                                    len(req.out_tokens))
         return len(live)
+
+    def latency_stats(self) -> dict:
+        """p50/p99/mean submit-to-completion latency over finished requests."""
+        return self.latency.snapshot()
 
     def run(self, max_steps: int = 10_000) -> None:
         for _ in range(max_steps):

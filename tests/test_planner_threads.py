@@ -72,6 +72,55 @@ def test_concurrent_repair_all_shares_planner_consistently(tmp_path):
     assert after["hits"] == before["hits"] + len(patterns)
 
 
+def test_repair_all_concurrent_with_degraded_reads(tmp_path):
+    """repair_all races 8 serving threads on the same store: every byte
+    served during the race is bit-identical (write-back invalidation never
+    exposes a stale cache entry), and the serving + planner counters stay
+    consistent — every read is accounted exactly once."""
+    store = _build(tmp_path / "s")
+    truth = {(sid, b): store._block_path(sid, b).read_bytes()
+             for sid in store.stripes for b in range(store.scheme.n)}
+    node = store.stripes[0].node_of_block[0]
+    store.fail_node(node)
+    keys = sorted(truth)
+    reads_per_thread = 150
+    barrier = threading.Barrier(9)
+    errors = []
+
+    def reader(seed):
+        rng = np.random.default_rng(seed)
+        barrier.wait()
+        for _ in range(reads_per_thread):
+            sid, b = keys[int(rng.integers(len(keys)))]
+            got = store.read(sid, b).tobytes()
+            if got != truth[(sid, b)]:
+                errors.append((sid, b))
+
+    def repairer():
+        barrier.wait()
+        return store.repair_all(pipeline=False)
+
+    with ThreadPoolExecutor(9) as pool:
+        futures = [pool.submit(reader, seed) for seed in range(8)]
+        repair = pool.submit(repairer)
+        for f in futures:
+            f.result()                       # raises on any reader failure
+        rep = repair.result()
+    assert rep["stripes_repaired"] > 0
+    assert not errors, f"stale/corrupt serves: {errors[:3]}"
+    t = store.telemetry
+    assert t.direct_reads + t.degraded_reads == 8 * reads_per_thread
+    # every degraded read either hit the hot cache or was counted a miss
+    # (coalesced waiters are misses too — they paid for the shared decode)
+    assert t.cache_hits + t.cache_misses == t.degraded_reads
+    stats = store.codec.planner.stats
+    assert stats.lookups == stats.hits + stats.misses
+    # post-repair, post-revive: the written-back blocks serve direct and
+    # bit-identical — no reconstruction artifacts survived the race
+    store.revive_node(node)
+    assert {k: store.read(*k).tobytes() for k in keys} == truth
+
+
 def test_lru_eviction_consistent_under_thread_hammer():
     """16 threads hammer a maxsize-8 planner with 3x as many distinct
     patterns: the LRU bound holds, counters add up, and every plan handed
