@@ -1,0 +1,168 @@
+"""Bit-plane batched decode: backend x S x B sweep (the PR-7 tentpole).
+
+Routes the same batched repair/decode work through all four kernel backends
+— ``ref`` (fused jnp table path), ``gf`` (bit-serial byte kernel), ``crs``
+(select-and-XOR on packed bit-planes), ``mxu`` (mod-2 systolic matmul) —
+asserting bit-identity against ``ref`` on every combination, and reports:
+
+* measured per-stripe wall time per backend (interpret-mode CPU numbers;
+  informational — the backends' relative wall order flips on real TPUs,
+  which is the point of the roofline below);
+* an interpret-mode roofline model per backend: bytes moved and XOR/MAC
+  counts per output byte, derived from the *actual* compiled plan shapes
+  and the actual bit-matrix density — fully deterministic, so the
+  regression gate floors model ratios and cache counts, never wall times;
+* bit-matrix expansion amortization: the whole sweep reuses each pattern's
+  cached ``CompiledPlan.bit_coeffs()`` expansion, so expansions == distinct
+  plans and launches/expansion >> 1.
+
+Roofline model (per stripe, plan ``coeffs (m, t)``, block bytes B,
+bit-matrix density d — measured, ~0.5 for random GF coefficients):
+
+  ref   moves t*B in + m*B out + m*t*B gathered table bytes; every product
+        is a random-access gather, which vectorizes poorly — modelled at
+        ``GATHER_COST`` vector-op equivalents each — plus (t-1)*m*B XORs.
+  gf    bit-serial shift-and-XOR: 8 rounds x 3 vector ops over the (m,t,B)
+        product lattice = 24*m*t*B vector byte-ops, no table traffic.
+  crs   XOR-only: d*(8m)*(8t)*(B/8) = 8*d*m*t*B byte-XORs (~4*m*t*B at
+        d=0.5) + 2*t*B packetize traffic. This 24-vs-4 ops ratio is why
+        crs beats gf wherever XOR throughput is the limit (DESIGN.md §11).
+  mxu   (8m)*(8t)*8B bf16 MACs = 512*m*t*B — 128x more arithmetic than
+        crs, but issued on the systolic array at matmul rate, modelled at
+        ``MXU_RATIO`` MACs per VPU-op slot; wins once m*t is large enough
+        to fill the array.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.engine import BatchedCodecEngine
+from repro.core.planner import bitmatrix_expansions
+from repro.core.schemes import make_scheme
+from repro.kernels.ops import BACKENDS, effective_backend
+
+from ._util import csv, timed
+
+GEOM = (24, 2, 2)           # the paper's P5
+SCHEME = "cp-azure"
+# Vector-op equivalents charged per table gather (ref path): a gather
+# issues element-at-a-time where an XOR covers a full 8-wide int32 lane.
+GATHER_COST = 8.0
+# MACs the systolic array retires per VPU vector-op slot (128x128 array
+# vs 8x128 vector unit).
+MXU_RATIO = 256.0
+
+
+def _roofline(m: int, t: int, B: int, density: float) -> dict:
+    """Per-backend bytes-moved / op-count model for one stripe (see module
+    docstring). All inputs are deterministic plan properties."""
+    base_io = t * B + m * B                      # read stack + written out
+    ops = {
+        "ref": GATHER_COST * m * t * B + (t - 1) * m * B,
+        "gf": 24.0 * m * t * B,
+        "crs": 8.0 * density * m * t * B,
+        "mxu": 512.0 * m * t * B / MXU_RATIO,
+    }
+    bytes_moved = {
+        "ref": base_io + m * t * B,              # gathered table bytes
+        "gf": float(base_io),
+        "crs": base_io + 2.0 * t * B,            # packetize round-trip
+        "mxu": base_io + 2.0 * t * B,
+    }
+    out = m * B
+    return {b: {"bytes_moved": bytes_moved[b], "ops": ops[b],
+                "ops_per_output_byte": ops[b] / out}
+            for b in BACKENDS}
+
+
+def _bench_combo(engines: dict, S: int, B: int, rng) -> dict:
+    """One (S, B) cell: repair the cascading two-block pattern through every
+    backend, assert bit-identity against ref, time each."""
+    k, r, p = GEOM
+    scheme = engines["ref"].scheme
+    data = rng.integers(0, 256, (S, k, B), dtype=np.uint8)
+    stripes = np.asarray(engines["ref"].encode(data))
+    pattern = frozenset({0, k})                  # data block + local parity
+    avail = {i: stripes[:, i, :] for i in range(scheme.n)
+             if i not in pattern}
+
+    want = None
+    row = {"S": S, "B": B}
+    # ref runs first so every other backend is asserted against the oracle
+    for backend in ("ref",) + tuple(b for b in BACKENDS if b != "ref"):
+        eng = engines[backend]
+
+        def decode():
+            out, _ = eng.repair_multi(pattern, avail)
+            return {b: np.asarray(v) for b, v in out.items()}
+
+        got, us = timed(decode)
+        assert eng.effective_backend == effective_backend(backend)
+        if want is None:
+            want = got
+        else:
+            for b in sorted(pattern):
+                assert (got[b] == want[b]).all(), \
+                    f"{backend} decode differs from ref at block {b}"
+        row[f"{backend}_us_per_stripe"] = us / S
+        csv(f"decode,{backend},S={S},B={B}", us / S,
+            f"effective={eng.effective_backend}")
+    row["crs_vs_ref_measured"] = (row["ref_us_per_stripe"]
+                                  / row["crs_us_per_stripe"])
+    return row
+
+
+def run(fast: bool = False) -> dict:
+    rng = np.random.default_rng(0)
+    k, r, p = GEOM
+    scheme = make_scheme(SCHEME, k, r, p)
+    engines = {b: BatchedCodecEngine(scheme, backend=b) for b in BACKENDS}
+    sweep_s = (8,) if fast else (8, 32)
+    sweep_b = (4096,) if fast else (4096, 16384)
+
+    exp_before = bitmatrix_expansions()
+    print("bench,backend,S,B,us_per_stripe,derived")
+    rows = [_bench_combo(engines, S, B, rng)
+            for S in sweep_s for B in sweep_b]
+    expansions = bitmatrix_expansions() - exp_before
+
+    # Every (S, B) cell launches the bit backends repeatedly (timed()
+    # warmup + repeats), yet each engine expands its one cascade plan
+    # exactly once for the whole sweep: amortization = launches/expansion.
+    cells = len(rows)
+    launches_per_bit_backend = cells * 4         # 1 warmup + 3 repeats
+    bit_launches = 2 * launches_per_bit_backend  # crs + mxu engines
+    assert expansions == 2, \
+        f"expected one expansion per bit-backend plan, got {expansions}"
+    amortization = bit_launches / expansions
+
+    # Deterministic roofline at the sweep's plan: the crs engine's actual
+    # compiled cascade plan supplies (m, t) and the real bit density.
+    plan = engines["crs"].planner.multi_plan(frozenset({0, k}))
+    density = float(plan.bit_coeffs().mean())
+    m, t = plan.coeffs.shape
+    B_model = sweep_b[0]
+    model = _roofline(m, t, B_model, density)
+    crs_vs_ref_model = model["ref"]["ops"] / model["crs"]["ops"]
+    crs_vs_gf_model = model["gf"]["ops"] / model["crs"]["ops"]
+    for b in BACKENDS:
+        print(f"roofline[{b}]: bytes={model[b]['bytes_moved']:.0f} "
+              f"ops/out-byte={model[b]['ops_per_output_byte']:.2f}")
+    print(f"bit-matrix density: {density:.3f}")
+    print(f"crs-vs-ref model speedup (interpret path): "
+          f"{crs_vs_ref_model:.2f}x; crs-vs-gf: {crs_vs_gf_model:.2f}x")
+    print(f"expansion amortization: {bit_launches} bit launches / "
+          f"{expansions} expansions = {amortization:.0f}x")
+
+    return {
+        "geometry": GEOM, "scheme": SCHEME, "rows": rows,
+        "bit_density": density,
+        "roofline": model,
+        "roofline_block_bytes": B_model,
+        "crs_vs_ref_model_speedup": crs_vs_ref_model,
+        "crs_vs_gf_model_speedup": crs_vs_gf_model,
+        "bit_launches": bit_launches,
+        "bit_expansions": expansions,
+        "expansion_amortization": amortization,
+        "expansions_per_plan": expansions / 2,
+    }

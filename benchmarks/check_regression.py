@@ -81,8 +81,24 @@ def _degraded_read(doc: dict) -> dict[str, float]:
     }
 
 
+def _batched_decode(doc: dict) -> dict[str, float]:
+    # All three metrics are counts/models, not timings. The expansion
+    # amortization is launches over byte->bit matrix expansions (the
+    # once-per-pattern-chunk cache contract; expansions_per_plan == 1 is
+    # additionally asserted inside the benchmark). The speedup floors are
+    # roofline-model ratios evaluated at the actual compiled plan's shape
+    # and measured bit density — deterministic given (scheme, pattern), so
+    # they hold machine-independently on the CPU interpret path.
+    return {
+        "expansion_amortization": doc["expansion_amortization"],
+        "crs_vs_ref_model_speedup": doc["crs_vs_ref_model_speedup"],
+        "crs_vs_gf_model_speedup": doc["crs_vs_gf_model_speedup"],
+    }
+
+
 EXTRACTORS = {
     "batched_repair": _batched_repair,
+    "batched_decode": _batched_decode,
     "pipelined_repair": _pipelined_repair,
     "sharded_gather": _sharded_gather,
     "stripe_schedule": _stripe_schedule,

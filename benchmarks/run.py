@@ -15,6 +15,7 @@ Sections (paper analogue in brackets):
   sharded_gather    per-shard gather scaling x locality cost [PR-4 tentpole]
   stripe_schedule   locality-aware stripe scheduling uplift  [PR-5 tentpole]
   degraded_read     coalesced degraded serving vs RS decode  [PR-6 tentpole]
+  batched_decode    bit-plane batched decode, backend sweep  [PR-7 tentpole]
   kernels           encode kernels vs jnp reference          [§V substrate]
   ckpt_stripes      EC-checkpoint encode/repair per arch    [framework]
   roofline          dry-run roofline table                   [deliverable g]
@@ -40,8 +41,8 @@ RESULTS = Path(__file__).resolve().parent / "results"
 SECTIONS = ("repair_costs", "local_portion", "mttdl", "repair_time",
             "blocksize_sweep", "filelevel", "batched_repair",
             "sharded_repair", "pipelined_repair", "sharded_gather",
-            "stripe_schedule", "degraded_read", "kernels", "ckpt_stripes",
-            "roofline")
+            "stripe_schedule", "degraded_read", "batched_decode", "kernels",
+            "ckpt_stripes", "roofline")
 
 
 def main(argv=None) -> int:

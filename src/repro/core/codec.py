@@ -26,7 +26,8 @@ from typing import Iterable, Mapping, Optional, Sequence
 import jax
 import numpy as np
 
-from repro.kernels.ops import encode_op, gf_matmul_op, matmul_backend, require_backend
+from repro.kernels.ops import (default_backend, encode_op, gf_matmul_op,
+                               require_backend)
 
 from .planner import RepairPlanner
 from .repair import MultiRepairPlan, RepairPlan
@@ -36,13 +37,18 @@ from .schemes import LRCScheme
 @dataclasses.dataclass
 class StripeCodec:
     scheme: LRCScheme
-    backend: str = "gf"  # see repro.kernels.ops.BACKENDS
+    # see repro.kernels.ops.BACKENDS; default honours REPRO_BACKEND
+    backend: str = dataclasses.field(default_factory=default_backend)
     planner: Optional[RepairPlanner] = None
 
     def __post_init__(self):
         require_backend(self.backend)
         if self.planner is None:
             self.planner = RepairPlanner(self.scheme)
+
+    def _bits(self, compiled) -> Optional[np.ndarray]:
+        """The plan's cached GF(2) expansion when the backend needs one."""
+        return compiled.bit_coeffs() if self.backend in ("crs", "mxu") else None
 
     # ------------------------------------------------------------- encoding
     def encode(self, data: jax.Array | np.ndarray) -> jax.Array:
@@ -68,7 +74,7 @@ class StripeCodec:
 
         stacked = jnp.stack([jnp.asarray(b, jnp.uint8) for b in blocks], axis=0)
         out = gf_matmul_op(coeffs.reshape(1, -1), stacked,
-                           backend=matmul_backend(self.backend))
+                           backend=self.backend)
         return out[0]
 
     def repair_single(self, failed: int, available: Mapping[int, jax.Array],
@@ -93,8 +99,8 @@ class StripeCodec:
         compiled = self.planner.multi_plan(failed)
         stacked = jnp.stack([jnp.asarray(available[b], jnp.uint8)
                              for b in compiled.reads], axis=0)
-        out = gf_matmul_op(compiled.coeffs, stacked,
-                           backend=matmul_backend(self.backend))
+        out = gf_matmul_op(compiled.coeffs, stacked, backend=self.backend,
+                           bitmatrix=self._bits(compiled))
         rebuilt = {b: out[i] for i, b in enumerate(compiled.targets)}
         return rebuilt, compiled.meta
 
@@ -105,13 +111,17 @@ class StripeCodec:
         compiled = self.planner.decode_plan(available.keys())
         stacked = jnp.stack([jnp.asarray(available[b], jnp.uint8)
                              for b in compiled.reads])
-        return gf_matmul_op(compiled.coeffs, stacked,
-                            backend=matmul_backend(self.backend))
+        return gf_matmul_op(compiled.coeffs, stacked, backend=self.backend,
+                            bitmatrix=self._bits(compiled))
+
+
+def cached_codec(scheme_key: tuple, backend: str | None = None) -> StripeCodec:
+    """Codec cache keyed by (name, k, r, p, resolved backend)."""
+    return _cached_codec(scheme_key, backend or default_backend())
 
 
 @functools.lru_cache(maxsize=64)
-def cached_codec(scheme_key: tuple, backend: str = "gf") -> StripeCodec:
-    """Codec cache keyed by (name, k, r, p)."""
+def _cached_codec(scheme_key: tuple, backend: str) -> StripeCodec:
     from .schemes import make_scheme
 
     name, k, r, p = scheme_key

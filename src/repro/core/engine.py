@@ -31,7 +31,9 @@ import numpy as np
 
 from repro.dist.sharding import MeshRules
 from repro.dist.stripes import stripe_span
-from repro.kernels.ops import encode_batch_op, gf_matmul_batch_op, matmul_backend, require_backend
+from repro.kernels.ops import (default_backend, effective_backend,
+                               encode_batch_op, gf_matmul_batch_op,
+                               require_backend)
 
 from .planner import CompiledPlan, RepairPlanner
 from .schemes import LRCScheme
@@ -42,7 +44,9 @@ Blocks = Union[jax.Array, np.ndarray, Mapping[int, "jax.Array | np.ndarray"]]
 @dataclasses.dataclass
 class BatchedCodecEngine:
     scheme: LRCScheme
-    backend: str = "gf"
+    # REPRO_BACKEND > mxu-on-TPU > gf (kernels.ops.default_backend),
+    # resolved once at construction.
+    backend: str = dataclasses.field(default_factory=default_backend)
     planner: RepairPlanner | None = None
     mesh_rules: MeshRules | None = None
     last_span: int = dataclasses.field(default=1, init=False)
@@ -50,6 +54,12 @@ class BatchedCodecEngine:
     # (block_until_ready) so span accounting upstream sees real compute time
     # rather than async-dispatch time.
     last_exec_seconds: float = dataclasses.field(default=0.0, init=False)
+    # Formulation the most recent launch actually ran (kernels.ops.
+    # effective_backend): equals ``backend`` except for the one documented
+    # substitution — an interpreted "gf" batch executes the fused table
+    # path and reports "ref". Nothing downgrades silently; this field is
+    # the telemetry record of what ran, per launch.
+    effective_backend: str = dataclasses.field(default="", init=False)
 
     def __post_init__(self):
         require_backend(self.backend)
@@ -103,9 +113,12 @@ class BatchedCodecEngine:
                              f"plan reads {plan.reads}, got {stacked.shape}")
         mr = self._rules(mesh_rules)
         self.last_span = stripe_span(stacked.shape, mr)
+        self.effective_backend = effective_backend(self.backend)
+        bitmatrix = (plan.bit_coeffs()
+                     if self.backend in ("crs", "mxu") else None)
         t0 = time.perf_counter()
         out = gf_matmul_batch_op(plan.coeffs, stacked,
-                                 backend=matmul_backend(self.backend),
+                                 backend=self.backend, bitmatrix=bitmatrix,
                                  mesh_rules=mr)
         jax.block_until_ready(out)
         self.last_exec_seconds = time.perf_counter() - t0
@@ -128,8 +141,12 @@ class BatchedCodecEngine:
                 f"expected (S, {self.scheme.k}, B) data, got {data.shape}")
         mr = self._rules(mesh_rules)
         self.last_span = stripe_span(data.shape, mr)
-        parity = encode_batch_op(self.planner.encode_plan().coeffs, data,
-                                 backend=self.backend, mesh_rules=mr)
+        self.effective_backend = effective_backend(self.backend)
+        plan = self.planner.encode_plan()
+        bitmatrix = (plan.bit_coeffs()
+                     if self.backend in ("crs", "mxu") else None)
+        parity = encode_batch_op(plan.coeffs, data, backend=self.backend,
+                                 mesh_rules=mr, bitmatrix=bitmatrix)
         return jnp.concatenate([data, parity], axis=1)
 
     # ------------------------------------------------------------- repair

@@ -24,7 +24,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from .gf import gf_solve_any
+from .gf import gf_solve_any, matrix_to_bitmatrix
 from .repair import (MultiRepairPlan, RepairPlan, multi_repair_plan,
                      single_repair_candidates, single_repair_plan)
 from .schemes import LRCScheme
@@ -35,6 +35,21 @@ from .schemes import LRCScheme
 # global decode strictly last. "recompute" (a parity from its own group's
 # items) is a local-group operation too.
 _SERVE_METHOD_RANK = {"group": 0, "recompute": 0, "cascade": 1, "global": 2}
+
+# Bit-matrix expansion accounting. The GF(2) expansion of a plan's byte
+# coefficient matrix (DESIGN.md §11) is cached on the CompiledPlan itself,
+# so it is computed at most once per plan — i.e. once per failure-pattern
+# chunk, amortized over every stripe batch that reuses the plan. The
+# counter makes that amortization observable: tests and the benchmark
+# regression gate assert expansions == distinct plans, not launches.
+_BIT_LOCK = threading.Lock()
+_BIT_EXPANSIONS = 0
+
+
+def bitmatrix_expansions() -> int:
+    """Process-wide count of byte->bit coefficient-matrix expansions."""
+    with _BIT_LOCK:
+        return _BIT_EXPANSIONS
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,10 +65,42 @@ class CompiledPlan:
     reads: tuple[int, ...]
     coeffs: np.ndarray                   # (len(targets), len(reads)) uint8
     meta: RepairPlan | MultiRepairPlan | None = None
+    # Lazily-cached GF(2) expansion of ``coeffs`` for the bit-plane backends
+    # (crs/mxu). Excluded from init/repr/compare: it is derived state, and
+    # ``dataclasses.replace`` (used when re-attaching meta) resets it to
+    # None, which only costs one re-expansion on the replaced plan.
+    _bit_coeffs: Optional[np.ndarray] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
 
     @property
     def cost(self) -> int:
         return len(self.reads)
+
+    def bit_coeffs(self) -> np.ndarray:
+        """The packed ``(8*targets, 8*reads)`` GF(2) expansion of ``coeffs``.
+
+        Computed on first use and cached on the plan (plans are LRU-cached
+        by the planner, so a whole pattern chunk — every batch launch that
+        reuses this plan — pays for exactly one expansion; see
+        :func:`bitmatrix_expansions`). Thread-safe: concurrent first calls
+        may race to build, but publication through ``object.__setattr__``
+        is atomic and the expansion is deterministic, so every caller sees
+        the same matrix and the counter counts at most one expansion per
+        plan under the lock.
+        """
+        cached = self._bit_coeffs
+        if cached is not None:
+            return cached
+        global _BIT_EXPANSIONS
+        with _BIT_LOCK:
+            cached = self._bit_coeffs
+            if cached is not None:
+                return cached
+            bm = matrix_to_bitmatrix(self.coeffs)
+            bm.setflags(write=False)
+            object.__setattr__(self, "_bit_coeffs", bm)
+            _BIT_EXPANSIONS += 1
+            return bm
 
 
 @dataclasses.dataclass

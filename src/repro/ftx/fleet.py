@@ -128,6 +128,12 @@ class FleetRepairReport:
     schedule: str = "none"
     scheduled_local_read_fraction: float = 1.0
     contiguous_local_read_fraction: float = 1.0
+    # The kernel formulation the repair launches actually executed
+    # (repro.kernels.ops.effective_backend): equals the store's configured
+    # backend except the one documented substitution — an interpreted "gf"
+    # batch runs the fused table path and reports "ref". Recorded per
+    # repair so no backend choice is ever silently downgraded.
+    effective_backend: str = ""
 
     @property
     def stripes_per_launch(self) -> float:
@@ -324,4 +330,6 @@ def repair_failed_nodes(store, nodes: Iterable[int], *,
             "scheduled_local_read_fraction", 1.0),
         contiguous_local_read_fraction=tele.get(
             "contiguous_local_read_fraction", 1.0),
+        effective_backend=tele.get("effective_backend",
+                                   store.cfg.backend),
     )

@@ -31,6 +31,7 @@ from repro.core.engine import BatchedCodecEngine
 from repro.core.repair import (MultiRepairPlan, multi_repair_plan,
                                single_repair_plan)
 from repro.core.schemes import make_scheme
+from repro.kernels.ops import default_backend as _default_backend
 from repro.serve.telemetry import LatencyRecorder
 
 
@@ -63,7 +64,10 @@ class StoreConfig:
     r: int = 2
     p: int = 2
     block_size: int = 1 << 20          # bytes per block
-    backend: str = "ref"               # kernel backend (jnp table path; "gf"/"crs"/"mxu" = Pallas)
+    # Kernel backend: REPRO_BACKEND when set, else the serving-tuned jnp
+    # table path ("gf"/"crs"/"mxu" = Pallas; see kernels.ops.BACKENDS).
+    backend: str = dataclasses.field(
+        default_factory=lambda: _default_backend("ref"))
     bandwidth_gbps: float = 1.0        # per-link model for simulated time
     hedge: int = 0                     # extra sources for hedged reads
     seed: int = 0
@@ -853,9 +857,19 @@ class StripeStore:
         stage_sum = ((t.read_seconds - before.read_seconds)
                      + (t.compute_seconds - before.compute_seconds)
                      + (t.write_seconds - before.write_seconds))
+        from repro.kernels.ops import effective_backend as _eff
+
         return {
             "stripes_repaired": sum(len(sids) for sids in affected.values()),
             "patterns": len(affected),
+            # The formulation the repair launches actually ran (see
+            # kernels.ops.effective_backend). Batched launches take the
+            # engine's per-launch record; with zero launches (or the
+            # per-stripe path, which never substitutes) this is the
+            # configured backend's static resolution.
+            "effective_backend": ((self.engine.effective_backend
+                                   or _eff(self.cfg.backend))
+                                  if batched else self.cfg.backend),
             "launches": launches,
             "devices": devices,
             "device_launches": device_launches,

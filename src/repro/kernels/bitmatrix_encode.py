@@ -70,6 +70,61 @@ def bitmatrix_encode(bitmatrix: jax.Array, packets: jax.Array, *,
     )(bitmatrix, packets)
 
 
+def _bitmatrix_batched_kernel(bm_ref, pk_ref, out_ref, *, k8: int):
+    """One stripe's (TR, TP) output tile of the (S, R8, P) batched apply.
+
+    The grid's leading axis walks stripes (like ``gf256_matmul_batched``);
+    the bitmatrix block is shared across all of them — one compiled plan's
+    bit expansion, S payloads.
+    """
+    bm = bm_ref[...].astype(jnp.int32)   # (TR, K8)
+    pk = pk_ref[0].astype(jnp.int32)     # block (1, K8, TP) -> (K8, TP)
+    tr, tp = out_ref.shape[1:]
+
+    def step(j, acc):
+        row = jax.lax.dynamic_slice(pk, (j, 0), (1, tp))   # (1, TP)
+        sel = jax.lax.dynamic_slice(bm, (0, j), (tr, 1))   # (TR, 1)
+        return acc ^ (sel * row)
+
+    acc = jax.lax.fori_loop(0, k8, step, jnp.zeros((tr, tp), jnp.int32))
+    out_ref[0] = acc.astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_r", "tile_p", "interpret"))
+def bitmatrix_encode_batched(bitmatrix: jax.Array, packets: jax.Array, *,
+                             tile_r: int = 8, tile_p: int = 1024,
+                             interpret: bool = False) -> jax.Array:
+    """Batched CRS apply: ``bitmatrix (R8, K8) x packets (S, K8, P) ->
+    (S, R8, P)``.
+
+    One Pallas launch covers every stripe: the grid gains a leading stripe
+    axis ``(S, R8/TR, P/TP)`` and the packet/output BlockSpecs index it,
+    while the (small) bitmatrix block is broadcast to all stripes. This is
+    the batched engine's bit-plane workhorse — repair/decode coefficient
+    matrices expanded once per plan apply to a whole stripe batch in one
+    launch (DESIGN.md §11).
+    """
+    r8, k8 = bitmatrix.shape
+    s, k8b, p = packets.shape
+    if k8 != k8b:
+        raise ValueError(f"shape mismatch {bitmatrix.shape} vs {packets.shape}")
+    tr = min(tile_r, r8)
+    tp = min(tile_p, p)
+    if r8 % tr or p % tp:
+        raise ValueError(f"(R8={r8}, P={p}) must divide tiles ({tr}, {tp})")
+    return pl.pallas_call(
+        functools.partial(_bitmatrix_batched_kernel, k8=k8),
+        grid=(s, r8 // tr, p // tp),
+        in_specs=[
+            pl.BlockSpec((tr, k8), lambda si, i, j: (i, 0)),
+            pl.BlockSpec((1, k8, tp), lambda si, i, j: (si, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, tr, tp), lambda si, i, j: (si, i, j)),
+        out_shape=jax.ShapeDtypeStruct((s, r8, p), jnp.uint8),
+        interpret=interpret,
+    )(bitmatrix, packets)
+
+
 # --------------------------------------------------------------------------
 # MXU mod-2 matmul path
 # --------------------------------------------------------------------------
@@ -117,5 +172,59 @@ def mod2_matmul_encode(bitmatrix: jax.Array, packets: jax.Array, *,
         ],
         out_specs=pl.BlockSpec((r8, tp), lambda j: (0, j)),
         out_shape=jax.ShapeDtypeStruct((r8, p), jnp.uint8),
+        interpret=interpret,
+    )(bm16, packets)
+
+
+def _mod2_batched_kernel(bm_ref, pk_ref, out_ref):
+    """One stripe's (R8, TP) output slab of the (S, R8, P) batched product.
+
+    Same fused unpack->dot->mod2->repack chain as :func:`_mod2_kernel`; the
+    grid's leading axis walks stripes, the bitmatrix rides along whole.
+    """
+    bm = bm_ref[...]                       # (R8, K8) bf16 of 0/1
+    pk = pk_ref[0].astype(jnp.int32)       # block (1, K8, TP) -> (K8, TP)
+    r8, k8 = bm.shape
+    _, tp = pk.shape
+    bits = (pk[:, :, None] >> jax.lax.broadcasted_iota(jnp.int32, (1, 1, _BITS), 2)) & 1
+    bits = bits.reshape(k8, tp * _BITS).astype(jnp.bfloat16)
+    counts = jax.lax.dot_general(
+        bm, bits, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    outbits = counts.astype(jnp.int32) & 1                    # (R8, TP*8)
+    outbits = outbits.reshape(r8, tp, _BITS)
+    weights = 1 << jax.lax.broadcasted_iota(jnp.int32, (1, 1, _BITS), 2)
+    out_ref[0] = jnp.sum(outbits * weights, axis=-1).astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_p", "interpret"))
+def mod2_matmul_encode_batched(bitmatrix: jax.Array, packets: jax.Array, *,
+                               tile_p: int = 256,
+                               interpret: bool = False) -> jax.Array:
+    """Batched MXU-path apply: ``bitmatrix (R8, K8) x packets (S, K8, P) ->
+    (S, R8, P)`` with a ``(S, P/TP)`` grid — one systolic launch per batch.
+
+    VMEM per step matches :func:`mod2_matmul_encode` exactly (the stripe
+    axis adds grid cells, not working-set bytes): for repair-sized plans
+    (R8 <= 8*(r+p) <= 72) the bf16 bits tensor dominates, well inside the
+    ~16 MB/core budget with double buffering.
+    """
+    r8, k8 = bitmatrix.shape
+    s, k8b, p = packets.shape
+    if k8 != k8b:
+        raise ValueError(f"shape mismatch {bitmatrix.shape} vs {packets.shape}")
+    tp = min(tile_p, p)
+    if p % tp:
+        raise ValueError(f"P={p} must divide tile_p={tp}")
+    bm16 = bitmatrix.astype(jnp.bfloat16)
+    return pl.pallas_call(
+        _mod2_batched_kernel,
+        grid=(s, p // tp),
+        in_specs=[
+            pl.BlockSpec((r8, k8), lambda si, j: (0, 0)),
+            pl.BlockSpec((1, k8, tp), lambda si, j: (si, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, r8, tp), lambda si, j: (si, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((s, r8, p), jnp.uint8),
         interpret=interpret,
     )(bm16, packets)

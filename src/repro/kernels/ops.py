@@ -8,10 +8,23 @@ worry about tile divisibility. ``backend``:
   "crs"   — bitmatrix_encode Pallas kernel (select-and-XOR on bit-planes)
   "mxu"   — mod2_matmul_encode Pallas kernel (systolic mod-2 matmul)
   "ref"   — pure-jnp table oracle (no Pallas)
+
+Every backend supports every op — encode, repair/decode combines, flat and
+batched. The bit-plane backends ("crs"/"mxu") run general GF matmuls
+through the packed bit-matrix expansion of the byte coefficient matrix
+(``repro.core.gf.matrix_to_bitmatrix``): callers that hold a compiled plan
+pass its cached expansion via ``bitmatrix=`` so the 8x blow-up is amortized
+over every chunk of a failure pattern (DESIGN.md §11). There is no silent
+backend downgrade anywhere in this module: unknown names raise, and the
+one documented substitution (an interpreted "gf" batch runs the fused
+table path, bit-identically, because the Pallas interpreter replays every
+grid cell) is reported by :func:`effective_backend` and recorded in engine
+and fleet telemetry.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -21,10 +34,13 @@ from repro.core.gf import matrix_to_bitmatrix
 from repro.dist.stripes import sharded_launch
 
 from . import ref as ref_lib
-from .bitmatrix_encode import bitmatrix_encode, mod2_matmul_encode
+from .bitmatrix_encode import (bitmatrix_encode, bitmatrix_encode_batched,
+                               mod2_matmul_encode, mod2_matmul_encode_batched)
 from .gf256_matmul import gf256_matmul, gf256_matmul_batched
 
 BACKENDS = ("gf", "crs", "mxu", "ref")
+# Backends whose general matmul runs on packed bit-planes (GF(2) algebra).
+BIT_BACKENDS = ("crs", "mxu")
 
 
 def require_backend(backend: str) -> str:
@@ -35,15 +51,25 @@ def require_backend(backend: str) -> str:
     return backend
 
 
-def matmul_backend(backend: str) -> str:
-    """Backend for general GF matmuls (repair/decode combines).
+def effective_backend(backend: str, *, interpret: bool | None = None,
+                      force_pallas: bool = False) -> str:
+    """The formulation a batched GF matmul with ``backend`` actually runs.
 
-    The bit-plane encode backends ("crs"/"mxu") have no general-matmul
-    formulation, so solve-style ops run on the jnp table path instead;
-    anything outside BACKENDS raises.
+    Identical to ``backend`` everywhere except the one documented
+    substitution: on interpreter hosts a "gf" batch executes the fused
+    table path ("ref") instead of replaying the bit-serial kernel cell by
+    cell — bit-identical, ~60x faster (see :func:`gf_matmul_batch_op`).
+    The bit-plane backends keep their own formulation on every host (the
+    interpreted path runs the same select-and-XOR / mod-2-matmul math as
+    one fused XLA call), so they report as themselves. Engine and fleet
+    telemetry record this value per launch; nothing downgrades silently.
     """
     require_backend(backend)
-    return backend if backend in ("gf", "ref") else "ref"
+    if interpret is None:
+        interpret = _on_cpu()
+    if backend == "gf" and interpret and not force_pallas:
+        return "ref"
+    return backend
 
 
 def _on_cpu() -> bool:
@@ -60,17 +86,41 @@ def _pad_axis(x: jax.Array, axis: int, mult: int) -> tuple[jax.Array, int]:
     return jnp.pad(x, widths), size
 
 
+def _as_bitmatrix(coef, bitmatrix) -> jax.Array:
+    """The GF(2) expansion of byte coeffs ``coef`` (m, t): the caller's
+    precomputed ``bitmatrix`` (a compiled plan's cached expansion) when
+    given — shape-checked against ``coef`` — else expanded here."""
+    if bitmatrix is None:
+        return jnp.asarray(matrix_to_bitmatrix(np.asarray(coef, np.uint8)))
+    bm = jnp.asarray(bitmatrix, jnp.uint8)
+    want = (coef.shape[0] * 8, coef.shape[1] * 8)
+    if bm.shape != want:
+        raise ValueError(f"bitmatrix shape {bm.shape} does not match the "
+                         f"{coef.shape} coefficient matrix (want {want})")
+    return bm
+
+
 def gf_matmul_op(coef, data, *, backend: str = "gf",
-                 interpret: bool | None = None) -> jax.Array:
-    """GF(2^8) coef (m,k) @ data (k,B) -> (m,B); pads B to the tile size."""
+                 interpret: bool | None = None,
+                 bitmatrix=None) -> jax.Array:
+    """GF(2^8) coef (m,k) @ data (k,B) -> (m,B); pads B to the tile size.
+
+    All four backends: gf runs the bit-serial Pallas kernel, ref the jnp
+    table oracle, and crs/mxu apply the coefficient matrix's packed
+    bit-matrix on bit-plane packets (``bitmatrix=`` passes a precomputed
+    expansion, e.g. a compiled plan's cached one).
+    """
+    require_backend(backend)
     if interpret is None:
         interpret = _on_cpu()
     coef = jnp.asarray(coef, jnp.uint8)
     data = jnp.asarray(data, jnp.uint8)
     if backend == "ref":
         return ref_lib.gf256_matmul_ref(coef, data)
-    if backend != "gf":
-        raise ValueError(f"gf_matmul_op supports gf/ref, got {backend}")
+    if backend in BIT_BACKENDS:
+        bm = _as_bitmatrix(coef, bitmatrix)
+        return _crs_bitmatrix_apply(bm, data, backend=backend,
+                                    interpret=interpret)
     tile_b = 512 if not interpret else 128
     padded, b = _pad_axis(data, 1, tile_b)
     coef_p, m = _pad_axis(coef, 0, 8)
@@ -94,20 +144,60 @@ def _gf_batch_kernel(coef, data, *, backend: str, interpret: bool,
     return out[:, :m, :b]
 
 
+def _bit_matmul_batch_kernel(bm, data, *, backend: str, interpret: bool,
+                             force_pallas: bool) -> jax.Array:
+    """Single-device body of the batched bit-plane matmul (shard_map-able).
+
+    ``bm`` is the packed (8m, 8t) GF(2) expansion of a byte coefficient
+    matrix, ``data`` the (S, t, B) read stack. Pads B to the packet
+    granule, packetizes per stripe, runs the stripe-grid kernel, unpacks.
+    On CPU hosts the interpreter replays every grid cell, so an
+    interpreted batch runs the *same formulation* as one fused XLA call
+    (the vmapped jnp oracles) — still select-and-XOR for crs and
+    mod-2 matmul for mxu, so the backend identity is preserved;
+    ``force_pallas=True`` runs the batched-grid kernel under the
+    interpreter anyway (lockstep tests).
+    """
+    tile_p = 1024 if backend == "crs" else 256
+    if interpret:
+        tile_p = 64
+    gran = 8 if (interpret and not force_pallas) else 8 * tile_p
+    padded, b = _pad_axis(data, 2, gran)
+    packets = ref_lib.packetize_batched(padded)
+    if interpret and not force_pallas:
+        fn = (ref_lib.bitmatrix_encode_batched_ref if backend == "crs"
+              else ref_lib.mod2_matmul_encode_batched_ref)
+        par = fn(bm, packets)
+    elif backend == "crs":
+        par = bitmatrix_encode_batched(bm, packets, tile_p=tile_p,
+                                       interpret=interpret)
+    else:
+        par = mod2_matmul_encode_batched(bm, packets, tile_p=tile_p,
+                                         interpret=interpret)
+    return ref_lib.unpacketize_batched(par)[:, :, :b]
+
+
 def gf_matmul_batch_op(coef, data, *, backend: str = "gf",
                        interpret: bool | None = None,
                        force_pallas: bool = False,
-                       mesh_rules=None) -> jax.Array:
+                       mesh_rules=None, bitmatrix=None) -> jax.Array:
     """Batched GF(2^8) ``coef (m,k) @ data (S,k,B) -> (S,m,B)``.
 
     One launch for the whole stripe batch; pads B to the tile size and m to
-    the TM granule, exactly like :func:`gf_matmul_op`.
+    the TM granule, exactly like :func:`gf_matmul_op`. All four backends:
+    gf/ref run the byte-table/bit-serial grid, crs/mxu run the stripe-grid
+    bit-plane kernels on the coefficient matrix's packed GF(2) expansion
+    (``bitmatrix=`` passes a precomputed one — the batched engine hands in
+    its compiled plan's cached expansion so a whole pattern chunk pays for
+    exactly one 8x blow-up).
 
     On CPU hosts the Pallas interpreter is a correctness tool, not a
     throughput path (it replays every grid cell), so an interpreted "gf"
     batch executes as one fused table-path XLA call instead — bit-identical,
-    ~60x faster than S interpreted launches. ``force_pallas=True`` runs the
-    batched-grid kernel under the interpreter anyway (lockstep tests).
+    ~60x faster than S interpreted launches — and the bit-plane backends
+    run their own formulation as fused XLA calls. :func:`effective_backend`
+    names what actually ran. ``force_pallas=True`` runs the batched-grid
+    kernels under the interpreter anyway (lockstep tests).
 
     ``mesh_rules`` shards the stripe axis over the mesh's data axes and runs
     one launch per device via ``shard_map`` (repro.dist.stripes); an
@@ -119,6 +209,7 @@ def gf_matmul_batch_op(coef, data, *, backend: str = "gf",
     sharding and a pre-sharded global array passes through with zero
     re-transfer, so the batch never materializes on one device first.
     """
+    require_backend(backend)
     if interpret is None:
         interpret = _on_cpu()
     coef = jnp.asarray(coef, jnp.uint8)
@@ -129,8 +220,11 @@ def gf_matmul_batch_op(coef, data, *, backend: str = "gf",
         data = jnp.asarray(data, jnp.uint8)
     if data.ndim != 3:
         raise ValueError(f"expected (S, k, B) data, got {data.shape}")
-    if backend not in ("gf", "ref"):
-        raise ValueError(f"gf_matmul_batch_op supports gf/ref, got {backend}")
+    if backend in BIT_BACKENDS:
+        bm = _as_bitmatrix(coef, bitmatrix)
+        return sharded_launch(_bit_matmul_batch_kernel, bm, data, mesh_rules,
+                              backend=backend, interpret=interpret,
+                              force_pallas=force_pallas)
     return sharded_launch(_gf_batch_kernel, coef, data, mesh_rules,
                           backend=backend, interpret=interpret,
                           force_pallas=force_pallas)
@@ -168,21 +262,6 @@ def crs_encode_op(coding: np.ndarray, blocks, *, backend: str = "crs",
                                 interpret=interpret)
 
 
-def _crs_batch_kernel(bm, blocks, *, backend: str,
-                      interpret: bool) -> jax.Array:
-    """Single-device body of the batched bit-plane encode (shard_map-able).
-
-    The coding matrix applies column-wise, so the stripe axis folds into the
-    byte axis — ``(S,k,B) -> (k, S*B)`` — and one 2-D launch covers the local
-    batch (each output byte depends only on its own column; exact).
-    """
-    s, k, b = blocks.shape
-    folded = jnp.transpose(blocks, (1, 0, 2)).reshape(k, s * b)
-    par = _crs_bitmatrix_apply(bm, folded, backend=backend,
-                               interpret=interpret)
-    return jnp.transpose(par.reshape(-1, s, b), (1, 0, 2))
-
-
 def encode_op(coding: np.ndarray, blocks, *, backend: str = "gf",
               interpret: bool | None = None) -> jax.Array:
     """Unified stripe-parity computation across all backends."""
@@ -195,30 +274,34 @@ def encode_op(coding: np.ndarray, blocks, *, backend: str = "gf",
 
 def encode_batch_op(coding: np.ndarray, blocks, *, backend: str = "gf",
                     interpret: bool | None = None,
-                    mesh_rules=None) -> jax.Array:
+                    mesh_rules=None, bitmatrix=None) -> jax.Array:
     """Batched stripe-parity: ``blocks (S, k, B) -> parity (S, m, B)``.
 
-    gf/ref run the batched kernel directly; the bit-plane backends (crs/mxu)
-    fold the stripe axis into the byte axis per device (see
-    :func:`_crs_batch_kernel`). ``mesh_rules`` shards the stripe axis over
-    the mesh's data axes, one launch per device.
+    Parity is a matmul of the generator's parity rows, so every backend
+    routes through :func:`gf_matmul_batch_op`: gf/ref run the batched table
+    /bit-serial grid, crs/mxu the stripe-grid bit-plane kernels (the coding
+    matrix's packed expansion, passed via ``bitmatrix=`` when the caller
+    caches it). ``mesh_rules`` shards the stripe axis over the mesh's data
+    axes, one launch per device.
     """
     require_backend(backend)
     blocks = jnp.asarray(blocks, jnp.uint8)
     if blocks.ndim != 3:
         raise ValueError(f"expected (S, k, B) blocks, got {blocks.shape}")
-    if backend in ("gf", "ref"):
-        return gf_matmul_batch_op(np.asarray(coding, np.uint8), blocks,
-                                  backend=backend, interpret=interpret,
-                                  mesh_rules=mesh_rules)
-    if interpret is None:
-        interpret = _on_cpu()
-    bm = jnp.asarray(matrix_to_bitmatrix(np.asarray(coding, np.uint8)))
-    return sharded_launch(_crs_batch_kernel, bm, blocks, mesh_rules,
-                          backend=backend, interpret=interpret)
+    return gf_matmul_batch_op(np.asarray(coding, np.uint8), blocks,
+                              backend=backend, interpret=interpret,
+                              mesh_rules=mesh_rules, bitmatrix=bitmatrix)
 
 
-@functools.lru_cache(maxsize=None)
-def default_backend() -> str:
-    """MXU path on TPU (the §Perf winner for wide stripes), gf elsewhere."""
+def default_backend(fallback: str | None = None) -> str:
+    """``REPRO_BACKEND`` when set (CI backend-matrix legs), else ``fallback``
+    when given (e.g. the store's serving-tuned "ref"), else the MXU path on
+    TPU (the §Perf winner for wide stripes) and gf elsewhere. Uncached so a
+    test can monkeypatch the env var; constructors resolve it once via
+    ``dataclasses.field(default_factory=...)``."""
+    env = os.environ.get("REPRO_BACKEND")
+    if env:
+        return require_backend(env)
+    if fallback is not None:
+        return require_backend(fallback)
     return "mxu" if jax.default_backend() == "tpu" else "gf"

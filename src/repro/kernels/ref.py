@@ -87,6 +87,16 @@ def unpacketize(packets: jax.Array) -> jax.Array:
     return blocks.astype(jnp.uint8)
 
 
+def packetize_batched(blocks: jax.Array) -> jax.Array:
+    """Batched :func:`packetize`: (S, k, B) -> (S, k*8, B//8)."""
+    return jax.vmap(packetize)(blocks)
+
+
+def unpacketize_batched(packets: jax.Array) -> jax.Array:
+    """Batched :func:`unpacketize`: (S, k*8, B//8) -> (S, k, B)."""
+    return jax.vmap(unpacketize)(packets)
+
+
 def bitmatrix_encode_ref(bitmatrix: jax.Array, packets: jax.Array) -> jax.Array:
     """CRS encode on packed bit-plane packets: out[i] = XOR_{j: bm[i,j]=1} packets[j].
 
@@ -97,6 +107,21 @@ def bitmatrix_encode_ref(bitmatrix: jax.Array, packets: jax.Array) -> jax.Array:
     sel = bm[:, :, None] * pk[None, :, :]  # 0/packet per (i, j)
     return jax.lax.reduce(sel.astype(jnp.uint8), np.uint8(0),
                           lambda a, b: jax.lax.bitwise_xor(a, b), (1,))
+
+
+def bitmatrix_encode_batched_ref(bitmatrix: jax.Array,
+                                 packets: jax.Array) -> jax.Array:
+    """Batched oracle for the stripe-grid CRS kernel: ``bitmatrix (R8, K8) x
+    packets (S, K8, P) -> (S, R8, P)`` — vmap over the stripe axis, bit-exact
+    lockstep for :func:`repro.kernels.bitmatrix_encode.bitmatrix_encode_batched`."""
+    return jax.vmap(bitmatrix_encode_ref, in_axes=(None, 0))(bitmatrix, packets)
+
+
+def mod2_matmul_encode_batched_ref(bitmatrix: jax.Array,
+                                   packets: jax.Array) -> jax.Array:
+    """Batched MXU-formulation oracle: vmap of :func:`mod2_matmul_encode_ref`
+    over the stripe axis. Must equal :func:`bitmatrix_encode_batched_ref`."""
+    return jax.vmap(mod2_matmul_encode_ref, in_axes=(None, 0))(bitmatrix, packets)
 
 
 def mod2_matmul_encode_ref(bitmatrix: jax.Array, packets: jax.Array) -> jax.Array:

@@ -18,8 +18,13 @@ def _stack(stripes, ids):
 
 @pytest.fixture(params=SCHEMES)
 def pair(request):
+    # default_backend() honors REPRO_BACKEND, so the CI backend-matrix legs
+    # (REPRO_BACKEND=crs / =mxu) drive this whole module through the
+    # bit-plane backends.
+    from repro.kernels.ops import default_backend
+
     s = make_scheme(request.param, 8, 2, 2)
-    codec = StripeCodec(s)
+    codec = StripeCodec(s, backend=default_backend())
     engine = BatchedCodecEngine(s, backend=codec.backend, planner=codec.planner)
     return s, codec, engine
 
@@ -186,7 +191,46 @@ def test_batch_op_rejects_unknown_backend(rng):
     data = rng.integers(0, 256, (2, 3, 16), dtype=np.uint8)
     coef = rng.integers(0, 256, (1, 3), dtype=np.uint8)
     with pytest.raises(ValueError):
-        gf_matmul_batch_op(coef, data, backend="crs")
+        gf_matmul_batch_op(coef, data, backend="nope")
+
+
+def test_batch_op_all_backends_bit_identical(rng):
+    """Every registered backend — including the bit-plane pair, which used
+    to be silently downgraded — runs the batched matmul bit-identically."""
+    from repro.kernels.ops import BACKENDS, gf_matmul_batch_op
+
+    coef = rng.integers(0, 256, (3, 5), dtype=np.uint8)
+    data = rng.integers(0, 256, (4, 5, 200), dtype=np.uint8)
+    want = np.asarray(gf_matmul_batch_op(coef, data, backend="ref"))
+    for backend in BACKENDS:
+        got = np.asarray(gf_matmul_batch_op(coef, data, backend=backend))
+        assert (got == want).all(), backend
+
+
+def test_batch_op_rejects_wrong_bitmatrix_shape(rng):
+    from repro.kernels.ops import gf_matmul_batch_op
+
+    coef = rng.integers(0, 256, (2, 3), dtype=np.uint8)
+    data = rng.integers(0, 256, (2, 3, 16), dtype=np.uint8)
+    bad = np.zeros((16, 16), dtype=np.uint8)   # want (16, 24)
+    with pytest.raises(ValueError):
+        gf_matmul_batch_op(coef, data, backend="crs", bitmatrix=bad)
+
+
+def test_bit_plane_batched_kernels_lockstep(rng):
+    """The stripe-grid crs/mxu Pallas kernels (interpreted, force_pallas)
+    match the table oracle exactly, including the B-padding path."""
+    from repro.kernels.ops import gf_matmul_batch_op
+
+    for (S, t, R, B) in [(1, 1, 5, 104), (3, 2, 9, 264), (4, 4, 7, 128)]:
+        coef = rng.integers(0, 256, (t, R), dtype=np.uint8)
+        data = rng.integers(0, 256, (S, R, B), dtype=np.uint8)
+        want = np.asarray(gf_matmul_batch_op(coef, data, backend="ref"))
+        for backend in ("crs", "mxu"):
+            got = np.asarray(gf_matmul_batch_op(
+                coef, data, backend=backend, interpret=True,
+                force_pallas=True))
+            assert (got == want).all(), (backend, S, t, R, B)
 
 
 # -------------------------------------------------------- store integration

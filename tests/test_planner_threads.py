@@ -168,6 +168,93 @@ def test_pipelined_repair_threads_share_planner(tmp_path):
     assert rep2.plan_cache["hits"] > 0
 
 
+def test_concurrent_byte_and_bit_plans_share_one_expansion():
+    """Byte plans and their bit-matrix expansions requested concurrently
+    for the same down-sets: LRU stats count only plan lookups (bit
+    expansions ride on the cached plan, never the planner cache), every
+    thread sees one identical expansion per plan, and the process-wide
+    expansion counter grows by exactly the number of distinct plans —
+    the once-per-pattern-chunk amortization contract (DESIGN.md §11)."""
+    from repro.core.gf import matrix_to_bitmatrix
+    from repro.core.planner import bitmatrix_expansions
+
+    scheme = make_scheme("cp-azure", 12, 2, 2)
+    planner = RepairPlanner(scheme)
+    patterns = [frozenset({b}) for b in range(8)]
+    # Warm the byte plans serially so the race below is over *one* cached
+    # plan object per pattern (racing solves legitimately build duplicate
+    # plan objects; only the published one matters for expansion counting).
+    for down in patterns:
+        planner.multi_plan(down)
+    base = planner.stats.snapshot()
+    assert base["misses"] == len(patterns)
+    before = bitmatrix_expansions()
+    barrier = threading.Barrier(16)
+    seen: list[dict] = []
+    errors = []
+
+    def worker(seed):
+        rng = np.random.default_rng(seed)
+        got = {}
+        barrier.wait()
+        for i in rng.permutation(len(patterns)):
+            down = patterns[i]
+            plan = planner.multi_plan(down)       # byte-plan lookup (hit)
+            bits = plan.bit_coeffs()              # bit-plan request
+            if bits.shape != (plan.coeffs.shape[0] * 8,
+                              plan.coeffs.shape[1] * 8):
+                errors.append(down)
+            got[down] = (id(plan.bit_coeffs()), bits)
+        seen.append(got)
+
+    with ThreadPoolExecutor(16) as pool:
+        list(pool.map(worker, range(16)))
+
+    assert not errors
+    # Bit requests never touch the planner cache: lookups grew only by the
+    # byte-plan hits, and hits+misses still add up.
+    stats = planner.stats
+    assert stats.lookups == stats.hits + stats.misses
+    assert stats.misses == base["misses"]
+    assert stats.hits == base["hits"] + 16 * len(patterns)
+    # Every thread got the same cached expansion object, with the right bits.
+    for down in patterns:
+        plan = planner.multi_plan(down)
+        ids = {got[down][0] for got in seen}
+        assert ids == {id(plan.bit_coeffs())}, down
+        want = matrix_to_bitmatrix(plan.coeffs)
+        for got in seen:
+            assert (got[down][1] == want).all(), down
+    # Counter: one expansion per plan — never per call or per thread.
+    assert bitmatrix_expansions() - before == len(patterns)
+
+
+def test_bit_expansion_cached_once_per_pattern_chunk(tmp_path):
+    """End-to-end counter test: a fleet repair through a bit-plane backend
+    expands each pattern's coefficient matrix exactly once, no matter how
+    many chunked launches the pattern's stripe group takes."""
+    from repro.core.planner import bitmatrix_expansions
+
+    cfg = StoreConfig(scheme="cp-azure", k=6, r=2, p=2, block_size=256,
+                      backend="crs", batch_stripes=4, pipeline_window=0)
+    store = StripeStore(tmp_path / "s", cfg)
+    payload = np.random.default_rng(5).integers(
+        0, 256, 80 * cfg.k * cfg.block_size, dtype=np.uint8)
+    store.put("blob", payload.tobytes())
+    store.seal()
+    node = store.stripes[0].node_of_block[0]
+    store.fail_node(node)
+    patterns = {store._down_blocks(sid) for sid in store.stripes
+                if store._down_blocks(sid)}
+    before = bitmatrix_expansions()
+    tele = store.repair_all()
+    assert tele["effective_backend"] == "crs"
+    # chunking (batch_stripes=4 over 80 stripes) guarantees each pattern
+    # group takes multiple launches — yet each pattern expands once
+    assert tele["launches"] > len(patterns)
+    assert bitmatrix_expansions() - before == len(patterns)
+
+
 def test_eviction_counter_matches_cache_size_single_thread():
     """Deterministic counterpart: distinct patterns streamed through a
     small cache evict exactly (misses - maxsize) times."""
