@@ -96,6 +96,25 @@ def _batched_decode(doc: dict) -> dict[str, float]:
     }
 
 
+def _reliability_sim(doc: dict) -> dict[str, float]:
+    # Everything floored here is a deterministic function of (config, seed):
+    # the paper's MTTDL ordering as a count (CP-Azure >= Azure-LRC and
+    # CP-Uniform >= uniform at matched overhead), sim-vs-closed-form
+    # agreement as a min/max ratio in (0, 1], the batched engine's events
+    # retired per epoch (a parallelism *model* ratio — how much each JAX
+    # selection/draw launch amortizes — never a wall time), and the counted
+    # local-decode fraction inside the rebuild window. Tail latencies
+    # (steady vs window p99) are reported in the JSON, not floored.
+    return {
+        "mttdl_ordering_ok": float(doc["schemes"]["ordering_ok"]),
+        "closed_form_agreement": doc["closed_form"]["agreement"],
+        "event_parallelism": min(
+            r["event_parallelism"] for r in doc["schemes"]["rows"].values()),
+        "window_local_decode_fraction":
+            doc["rebuild_window"]["window_local_decode_fraction"],
+    }
+
+
 EXTRACTORS = {
     "batched_repair": _batched_repair,
     "batched_decode": _batched_decode,
@@ -103,6 +122,7 @@ EXTRACTORS = {
     "sharded_gather": _sharded_gather,
     "stripe_schedule": _stripe_schedule,
     "degraded_read": _degraded_read,
+    "reliability_sim": _reliability_sim,
 }
 
 

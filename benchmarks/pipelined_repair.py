@@ -28,7 +28,7 @@ from pathlib import Path
 
 import numpy as np
 
-from repro.ftx import StoreConfig, StripeStore
+from repro.ftx import RepairOptions, StoreConfig, StripeStore
 
 from ._util import csv
 
@@ -60,7 +60,7 @@ def _repair(store: StripeStore, node: int, *, pipeline: bool,
             window: int | None, truth: dict) -> dict:
     store.fail_node(node)
     t0 = time.perf_counter()
-    tele = store.repair_all(pipeline=pipeline, window=window)
+    tele = store.repair_all(options=RepairOptions(pipeline=pipeline, window=window))
     wall = time.perf_counter() - t0
     store.revive_node(node)
     for (sid, b), want in truth.items():

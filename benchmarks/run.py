@@ -16,6 +16,7 @@ Sections (paper analogue in brackets):
   stripe_schedule   locality-aware stripe scheduling uplift  [PR-5 tentpole]
   degraded_read     coalesced degraded serving vs RS decode  [PR-6 tentpole]
   batched_decode    bit-plane batched decode, backend sweep  [PR-7 tentpole]
+  reliability_sim   event-driven fleet reliability simulator [PR-8 tentpole]
   kernels           encode kernels vs jnp reference          [§V substrate]
   ckpt_stripes      EC-checkpoint encode/repair per arch    [framework]
   roofline          dry-run roofline table                   [deliverable g]
@@ -41,8 +42,8 @@ RESULTS = Path(__file__).resolve().parent / "results"
 SECTIONS = ("repair_costs", "local_portion", "mttdl", "repair_time",
             "blocksize_sweep", "filelevel", "batched_repair",
             "sharded_repair", "pipelined_repair", "sharded_gather",
-            "stripe_schedule", "degraded_read", "batched_decode", "kernels",
-            "ckpt_stripes", "roofline")
+            "stripe_schedule", "degraded_read", "batched_decode",
+            "reliability_sim", "kernels", "ckpt_stripes", "roofline")
 
 
 def main(argv=None) -> int:

@@ -50,7 +50,8 @@ def _worker(devices: int, stripes: int, block: int, stall: float,
     import jax
 
     from repro.dist.sharding import with_rules
-    from repro.ftx import StoreConfig, StripeStore, repair_failed_nodes
+    from repro.ftx import (RepairOptions, StoreConfig, StripeStore,
+                           repair_failed_nodes)
 
     assert len(jax.devices()) == devices
     k, r, p = GEOM
@@ -74,9 +75,9 @@ def _worker(devices: int, stripes: int, block: int, stall: float,
         node = sa.stripes[0].node_of_block[0]
         mesh = jax.make_mesh((devices, 1), ("data", "model"))
         with with_rules(mesh):
-            rep = repair_failed_nodes(sa, [node], pipeline=True)
+            rep = repair_failed_nodes(sa, [node], options=RepairOptions(pipeline=True))
         assert rep.devices == devices, (rep.devices, devices)
-        base = repair_failed_nodes(sb, [node], pipeline=False)
+        base = repair_failed_nodes(sb, [node], options=RepairOptions(pipeline=False))
         for sid in sa.stripes:
             for b in range(sa.scheme.n):
                 assert sa._block_path(sid, b).read_bytes() == \

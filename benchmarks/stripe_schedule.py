@@ -63,7 +63,8 @@ def _worker(devices: int, stripes: int, block: int, policy: str,
 
     from repro.dist.sharding import with_rules
     from repro.dist.topology import Topology
-    from repro.ftx import StoreConfig, StripeStore, repair_failed_nodes
+    from repro.ftx import (RepairOptions, StoreConfig, StripeStore,
+                           repair_failed_nodes)
 
     assert len(jax.devices()) == devices
     k, r, p = GEOM
@@ -99,12 +100,14 @@ def _worker(devices: int, stripes: int, block: int, policy: str,
                 and any(n in sa.stripes[s].node_of_block for s in sa.stripes)))
         mesh = jax.make_mesh((devices, 1), ("data", "model"))
         with with_rules(mesh):
-            rep = repair_failed_nodes(sa, nodes, pipeline=True,
-                                      schedule="locality")
+            rep = repair_failed_nodes(
+                sa, nodes, options=RepairOptions(pipeline=True,
+                                                 schedule="locality"))
             # like-for-like baseline: same mesh, same sharded gather, the
             # contiguous stripe->shard assignment — only the scheduler off
-            base = repair_failed_nodes(sb, nodes, pipeline=False,
-                                       schedule="none")
+            base = repair_failed_nodes(
+                sb, nodes, options=RepairOptions(pipeline=False,
+                                                 schedule="none"))
         for sid in sa.stripes:
             for b in range(sa.scheme.n):
                 assert sa._block_path(sid, b).read_bytes() == \

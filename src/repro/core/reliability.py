@@ -44,11 +44,58 @@ class ReliabilityParams:
     repair_time_scale: float = 1.0
 
 
-def _repair_hours(cost_blocks: float, f: int, p: ReliabilityParams) -> float:
+def repair_hours(cost_blocks: float, f: int, p: ReliabilityParams) -> float:
+    """Mean hours to repair an ``f``-failure state that reads
+    ``cost_blocks`` blocks: detection plus transfer at the repair
+    bandwidth, times the global calibration scale.
+
+    This is the single repair-time model shared by the closed-form Markov
+    chain below and the event-driven simulator (``repro.sim``): both turn a
+    plan's block-read cost into a vulnerability-window duration through
+    exactly this function, so their MTTDLs are comparable by construction.
+    """
     transfer_hours = (cost_blocks * p.block_mb * 8.0 / 1000.0
                       / p.bandwidth_gbps / 3600.0)
     detect = p.detect_hours_single if f == 1 else p.detect_hours_multi
     return (detect + transfer_hours) * p.repair_time_scale
+
+
+_repair_hours = repair_hours  # pre-PR-8 private name
+
+
+def repair_cost_profile(scheme: LRCScheme, fmax: Optional[int] = None,
+                        samples: int = 200, seed: int = 7) -> np.ndarray:
+    """Mean repair cost in blocks per failure count: ``cost[f]`` for
+    ``f = 0..fmax`` (``cost[0] = 0``).
+
+    Exactly the per-state costs the Markov chain uses (ARC_1, ARC_2,
+    sampled ARC_f with the chain's sampling seeds), exported so the
+    event-driven simulator's ``cost_model="average"`` mode reproduces the
+    closed form's repair rates bit-for-bit.
+    """
+    fmax = scheme.p + scheme.r if fmax is None else fmax
+    cost = np.zeros(fmax + 1)
+    for f in range(1, fmax + 1):
+        if f == 1:
+            cost[f] = metrics_lib.arc1(scheme)
+        elif f == 2:
+            cost[f] = metrics_lib.arc2(scheme)
+        else:
+            cost[f] = metrics_lib.arc_f(scheme, f, samples=samples,
+                                        seed=seed + 31 * f)
+    return cost
+
+
+def unrecoverable_profile(scheme: LRCScheme, fmax: Optional[int] = None,
+                          samples: int = 1500, seed: int = 7) -> np.ndarray:
+    """Undecodable-pattern fractions ``q[f]`` for ``f = 0..fmax+1``,
+    monotone-guarded exactly as the Markov chain consumes them."""
+    fmax = scheme.p + scheme.r if fmax is None else fmax
+    q = np.zeros(fmax + 2)
+    for f in range(1, fmax + 2):
+        q[f] = metrics_lib.unrecoverable_fraction(scheme, f, samples=samples,
+                                                  seed=seed + f)
+    return np.maximum.accumulate(q)
 
 
 def stripe_mttdl_years(scheme: LRCScheme,
@@ -73,22 +120,10 @@ def stripe_mttdl_years(scheme: LRCScheme,
     fmax = scheme.p + scheme.r  # beyond this some data is necessarily lost
     lam = 1.0 / (p.node_mttf_years * HOURS_PER_YEAR)
 
-    # Undecodable-pattern fractions q_0..q_{fmax+1}.
-    q = np.zeros(fmax + 2)
-    for f in range(1, fmax + 2):
-        q[f] = metrics_lib.unrecoverable_fraction(scheme, f, samples=samples,
-                                                  seed=seed + f)
-    q = np.maximum.accumulate(q)  # monotone by construction; guard sampling noise
-
-    # Mean repair cost per state (blocks read).
-    cost = np.zeros(fmax + 1)
-    for f in range(1, fmax + 1):
-        if f == 1:
-            cost[f] = metrics_lib.arc1(scheme)
-        elif f == 2:
-            cost[f] = metrics_lib.arc2(scheme)
-        else:
-            cost[f] = metrics_lib.arc_f(scheme, f, samples=200, seed=seed + 31 * f)
+    # Undecodable-pattern fractions q_0..q_{fmax+1} and mean repair cost per
+    # state (blocks read) — the shared profiles the simulator also consumes.
+    q = unrecoverable_profile(scheme, fmax, samples=samples, seed=seed)
+    cost = repair_cost_profile(scheme, fmax, seed=seed)
 
     # Transient states 0..fmax; absorbing DL.
     nstates = fmax + 1
@@ -107,7 +142,7 @@ def stripe_mttdl_years(scheme: LRCScheme,
         raise ValueError(f"unknown reliability model {model!r}")
     mu = np.zeros(nstates)
     for f in range(1, nstates):
-        mu[f] = 1.0 / _repair_hours(cost[f], f, p)
+        mu[f] = 1.0 / repair_hours(cost[f], f, p)
 
     # Expected absorption time T_f: (sum of outflow rates) * T_f =
     # 1 + rate_up_ok * T_{f+1} + mu * T_{f-1}; from the top state every new

@@ -89,6 +89,24 @@ class Topology:
         """Failure domain of ``node`` (contiguous equal ranges)."""
         return node * self.num_domains // self.num_nodes
 
+    # Rack vocabulary: the reliability simulator (``repro.sim``) models a
+    # disk/node/rack unit hierarchy; its racks ARE this topology's failure
+    # domains (one correlated-failure blast radius per domain), so the same
+    # Topology object drives placement, gather sharding, and fleet
+    # simulation without a parallel geometry.
+    @property
+    def num_racks(self) -> int:
+        """Racks for the unit hierarchy — identical to ``num_domains``."""
+        return self.num_domains
+
+    def rack_of(self, node: int) -> int:
+        """Rack of ``node`` — identical to :meth:`domain_of`."""
+        return self.domain_of(node)
+
+    def nodes_by_rack(self) -> list[list[int]]:
+        """Node ids grouped by rack (= failure domain), ascending."""
+        return [self.nodes_in(d) for d in range(self.num_domains)]
+
     def nodes_in(self, domain: int) -> list[int]:
         """All node ids in ``domain``, ascending."""
         n, d = self.num_nodes, self.num_domains

@@ -1,9 +1,15 @@
-"""Failure injection + elastic re-striping.
+"""Failure injection + trace replay + elastic re-striping.
 
 ``FailureInjector`` drives Poisson node failures over simulated time against
 a StripeStore, invoking repair and tracking exposure (time at reduced
 redundancy) — the ingredients of the paper's MTTDL story, executed against
-real encoded bytes instead of a closed-form chain.
+real encoded bytes instead of a closed-form chain. Since PR 8 it emits the
+unified :mod:`repro.ftx.events` schema (``NodeFailEvent`` +
+``RepairDoneEvent`` pairs) and can *replay* any event trace in that schema
+against another store (:meth:`FailureInjector.replay`) — the same
+vocabulary the event-driven fleet simulator (``repro.sim``) speaks, so
+injector logs, simulator output, and future real-cluster traces are
+interchangeable.
 
 ``restripe`` implements elastic scaling: when the fleet grows or shrinks,
 re-encode open stripes to a new geometry with bandwidth accounting (the
@@ -12,21 +18,37 @@ wide-stripe generation cost that StripeMerge-style systems optimize).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import warnings
+from typing import Iterable, Optional
 
 import numpy as np
 
+from .events import (FleetEvent, NodeFailEvent, RepairDoneEvent,
+                     sort_events)
+from .options import RepairOptions
 from .stripestore import NodeState, StoreConfig, StripeStore
 
 
-@dataclasses.dataclass
-class FailureEvent:
-    t: float
-    node: int
-    repaired_at: float
-    blocks_read: int
-    sim_seconds: float
-    local: bool
+@dataclasses.dataclass(frozen=True)
+class FailureEvent(NodeFailEvent):
+    """Deprecated pre-PR-8 record fusing a node failure with its repair.
+
+    Kept so old constructor kwargs (``t=, node=, repaired_at=,
+    blocks_read=, sim_seconds=, local=``) keep working; it now *is* a
+    :class:`~repro.ftx.events.NodeFailEvent`, so code that migrated to the
+    unified schema classifies it correctly. Construct the schema types
+    directly instead.
+    """
+    repaired_at: float = 0.0
+    blocks_read: int = 0
+    sim_seconds: float = 0.0
+    local: bool = True
+
+    def __post_init__(self):
+        warnings.warn(
+            "repro.ftx.failures.FailureEvent is deprecated: use the "
+            "repro.ftx.events schema (NodeFailEvent + RepairDoneEvent)",
+            DeprecationWarning, stacklevel=3)
 
 
 class FailureInjector:
@@ -35,16 +57,40 @@ class FailureInjector:
         self.store = store
         self.mttf_hours = mttf_hours
         self.rng = np.random.default_rng(seed)
-        self.events: list[FailureEvent] = []
+        self.events: list[FleetEvent] = []
         self.clock = 0.0
         # None: the store's default (pipelined when cfg.pipeline_window > 0);
         # simulated repair *time* is identical either way — the pipeline
         # changes wall-clock, not the bandwidth model.
         self.pipeline = pipeline
 
-    def run(self, hours: float, repair_immediately: bool = True) -> list[FailureEvent]:
+    def _fail_and_repair(self, t: float, node: int,
+                         repair: bool) -> list[FleetEvent]:
+        """Fail ``node`` at ``t`` (and repair it through the real pipeline
+        when ``repair``), returning the emitted schema events."""
+        out: list[FleetEvent] = [NodeFailEvent(t=t, node=node)]
+        self.store.fail_node(node)
+        if repair:
+            tele = self.store.repair_all(
+                options=RepairOptions(pipeline=self.pipeline))
+            self.store.revive_node(node)
+            out.append(RepairDoneEvent(
+                t=t + tele["sim_seconds"] / 3600.0,
+                unit=node, kind="node", started_at=t,
+                blocks_read=tele["blocks_read"],
+                sim_seconds=tele["sim_seconds"],
+                local=tele["repairs_global"] == 0))
+        return out
+
+    def run(self, hours: float,
+            repair_immediately: bool = True) -> list[FleetEvent]:
         """Simulate ``hours`` of operation; each failure repairs onto the
-        same node id (a fresh replacement host) before the next event."""
+        same node id (a fresh replacement host) before the next event.
+
+        Returns the full emitted event log (``NodeFailEvent`` followed by
+        its ``RepairDoneEvent`` when repairs run), also accumulated on
+        ``self.events``.
+        """
         n = self.store.num_nodes
         rate = n / self.mttf_hours
         t = self.clock
@@ -54,18 +100,43 @@ class FailureInjector:
             if t >= end:
                 break
             node = int(self.rng.integers(n))
-            self.store.fail_node(node)
-            if repair_immediately:
-                tele = self.store.repair_all(pipeline=self.pipeline)
-                self.store.revive_node(node)
-                self.events.append(FailureEvent(
-                    t=t, node=node,
-                    repaired_at=t + tele["sim_seconds"] / 3600.0,
-                    blocks_read=tele["blocks_read"],
-                    sim_seconds=tele["sim_seconds"],
-                    local=tele["repairs_global"] == 0))
+            self.events.extend(
+                self._fail_and_repair(t, node, repair_immediately))
         self.clock = end
         return self.events
+
+    def replay(self, events: Iterable[FleetEvent],
+               repair_immediately: bool = True) -> list[FleetEvent]:
+        """Consume an event trace: apply every ``NodeFailEvent`` against
+        the store in canonical order, repairing through the real pipeline.
+
+        The consuming half of the unified schema: a trace emitted by
+        another injector (different store geometry), by the fleet
+        simulator, or parsed from a real cluster log replays against this
+        store's actual codec and repair pipeline. Non-failure events
+        (repair-done, scrub, ...) in the input are ignored — repairs are
+        re-executed here, so the returned log carries *this* store's repair
+        costs. Advances ``self.clock`` to the last event time.
+        """
+        out: list[FleetEvent] = []
+        for ev in sort_events(events):
+            if isinstance(ev, NodeFailEvent):
+                if not 0 <= ev.node < self.store.num_nodes:
+                    raise ValueError(f"trace node {ev.node} outside store "
+                                     f"with {self.store.num_nodes} nodes")
+                out.extend(self._fail_and_repair(ev.t, ev.node,
+                                                 repair_immediately))
+                self.clock = max(self.clock, ev.t)
+        self.events.extend(out)
+        return out
+
+    def failures(self) -> list[NodeFailEvent]:
+        """Just the failure events of the accumulated log."""
+        return [e for e in self.events if isinstance(e, NodeFailEvent)]
+
+    def repairs(self) -> list[RepairDoneEvent]:
+        """Just the repair-done events of the accumulated log."""
+        return [e for e in self.events if isinstance(e, RepairDoneEvent)]
 
 
 def restripe(store: StripeStore, new_cfg: StoreConfig, root) -> tuple[StripeStore, dict]:

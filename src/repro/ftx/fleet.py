@@ -24,6 +24,8 @@ from typing import Iterable, Optional
 from repro.core.reliability import ReliabilityParams, stripe_mttdl_years
 from repro.core.schemes import make_scheme
 
+from .options import RepairOptions, resolve_options
+
 
 @dataclasses.dataclass(frozen=True)
 class FleetSpec:
@@ -257,29 +259,31 @@ def read_report(store, *, reset: bool = False) -> DegradedReadReport:
 def repair_failed_nodes(store, nodes: Iterable[int], *,
                         spare_of: Optional[dict[int, int]] = None,
                         revive: bool = True,
-                        batched: bool = True,
-                        mesh_rules=None,
-                        pipeline: Optional[bool] = None,
-                        window: Optional[int] = None,
-                        placement=None,
-                        schedule: Optional[str] = None) -> FleetRepairReport:
+                        options: Optional[RepairOptions] = None,
+                        **legacy) -> FleetRepairReport:
     """Fail ``nodes`` and rebuild every affected stripe in the store.
 
     All stripes whose blocks lived on the failed nodes are grouped by
     failure pattern and repaired through the store's batched engine — one
-    launch per (pattern, chunk). ``pipeline`` (default: on when
-    ``cfg.pipeline_window > 0``) overlaps each window's disk reads, device
-    launch and write-back through the async pipeline; the report's
-    ``read/compute/write_seconds`` and ``overlap_seconds`` fields make the
-    overlap observable. ``mesh_rules`` (or an ambient ``with_rules``
-    context) device-shards each launch's stripe axis; the report's
+    launch per (pattern, chunk). ``options``
+    (:class:`repro.ftx.options.RepairOptions`) carries the execution
+    knobs; the pre-PR-8 spellings (``batched=``, ``mesh_rules=``,
+    ``pipeline=``, ``window=``, ``placement=``, ``schedule=``) still work
+    for one deprecation cycle.
+
+    ``options.pipeline`` (default: on when ``cfg.pipeline_window > 0``)
+    overlaps each window's disk reads, device launch and write-back
+    through the async pipeline; the report's ``read/compute/write_seconds``
+    and ``overlap_seconds`` fields make the overlap observable.
+    ``options.mesh_rules`` (or an ambient ``with_rules`` context)
+    device-shards each launch's stripe axis; the report's
     ``devices``/``device_launches`` fields record the resulting per-device
-    launch counts. ``placement`` (a
+    launch counts. ``options.placement`` (a
     ``repro.dist.placement.PlacementMap``; defaults to the store's, else
     one derived from the node->shard default for the mesh's stripe-axis
     span) drives the per-shard gather and the local/remote read accounting
     reported via ``local_reads``/``remote_reads``/
-    ``gather_bytes_per_shard``. ``schedule`` (default
+    ``gather_bytes_per_shard``. ``options.schedule`` (default
     ``cfg.stripe_schedule``) picks the stripe -> device-shard assignment of
     each batched chunk: ``"locality"`` (``repro.dist.schedule``) permutes
     chunks onto the shards owning most of their surviving blocks,
@@ -289,14 +293,13 @@ def repair_failed_nodes(store, nodes: Iterable[int], *,
     difference observable. ``revive`` marks the nodes UP again after
     the rebuild (blocks were re-materialized in place or onto spares).
     """
+    o = resolve_options(options, legacy, RepairOptions,
+                        "repair_failed_nodes")
     nodes = tuple(nodes)
     for node in nodes:
         store.fail_node(node)
     before = store.codec.planner.stats.snapshot()
-    tele = store.repair_all(spare_of=spare_of, batched=batched,
-                            mesh_rules=mesh_rules, pipeline=pipeline,
-                            window=window, placement=placement,
-                            schedule=schedule)
+    tele = store.repair_all(spare_of=spare_of, options=o)
     after = store.codec.planner.stats.snapshot()
     if revive:
         for node in nodes:

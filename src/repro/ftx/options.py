@@ -1,0 +1,95 @@
+"""Options objects for the repair and serving paths (PR 8 API collapse).
+
+``StripeStore.repair_all`` grew one keyword per PR — ``batched=``,
+``mesh_rules=``, ``pipeline=``, ``window=``, ``pipeline_hook=``,
+``placement=``, ``schedule=`` — and every layer above it
+(``RepairPipeline``, ``repair_failed_nodes``, ``FailureInjector``, the
+benchmarks) re-declared the same sprawl to forward it. This module
+collapses the knobs into two frozen dataclasses:
+
+* :class:`RepairOptions` — how to execute a repair. ``None`` fields mean
+  "the store's configured default", exactly the semantics the old kwargs
+  had, so ``RepairOptions()`` is always safe.
+* :class:`ServeOptions` — how to serve a (possibly degraded) read:
+  per-request overrides of the store-config coalescing/cache knobs.
+
+All entry points now take ``options=``; the legacy kwargs are still
+accepted for one deprecation cycle through :func:`resolve_options`, which
+folds them into an options object (explicit legacy kwargs win over the
+``options`` value, matching what the old call sites expressed) and emits a
+single ``DeprecationWarning``. The fold is pure field substitution —
+``dataclasses.replace`` — so a legacy call and its options-object spelling
+are *the same object* by construction; the bit-identity tests in
+``tests/test_options.py`` pin that.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Callable, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class RepairOptions:
+    """How to execute a repair (``StripeStore.repair_all`` and friends).
+
+    Every field defaults to "whatever the store is configured to do":
+    ``None`` means the store-config default for that knob (``pipeline`` ->
+    ``cfg.pipeline_window > 0``, ``window`` -> ``cfg.pipeline_window``,
+    ``schedule`` -> ``cfg.stripe_schedule``, ``placement`` -> the store's
+    map, ``mesh_rules`` -> the ambient ``with_rules`` context).
+    """
+    batched: bool = True                 # pattern-batched engine vs seed loop
+    mesh_rules: Any = None               # device sharding of the stripe axis
+    pipeline: Optional[bool] = None      # async double-buffered windows
+    window: Optional[int] = None         # stripes per window/launch chunk
+    pipeline_hook: Optional[Callable[[str, int], None]] = None
+    placement: Any = None                # PlacementMap for the sharded gather
+    schedule: Optional[str] = None       # "none" | "locality"
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeOptions:
+    """How to serve one read (``StripeStore.read``/``read_range``).
+
+    Per-request overrides of the store-config serving knobs; ``None``
+    keeps the configured behavior. ``coalesce=False`` opts this request
+    out of in-flight decode sharing (it always leads its own decode);
+    ``use_cache=False`` bypasses the hot-block cache both ways — no probe,
+    and the reconstruction is not inserted (sibling targets of a multi-
+    block plan are still cached: they belong to other requests).
+    """
+    coalesce: Optional[bool] = None
+    use_cache: Optional[bool] = None
+
+    def coalesce_for(self, cfg) -> bool:
+        return cfg.coalesce_reads if self.coalesce is None else self.coalesce
+
+    def cache_for(self, cfg) -> bool:
+        return (cfg.read_cache_blocks > 0 if self.use_cache is None
+                else self.use_cache)
+
+
+def resolve_options(options, legacy: dict, cls, where: str):
+    """Fold deprecated keyword arguments into an options object.
+
+    ``legacy`` holds only the kwargs the caller actually passed (the
+    ``**legacy`` dict of the accepting function), so passing a legacy kwarg
+    at its default value still round-trips exactly. Unknown names raise
+    ``TypeError`` like a real signature would; any known name emits one
+    ``DeprecationWarning`` naming the replacement. Explicit legacy kwargs
+    override the same field on ``options`` — the old spelling keeps meaning
+    what it always meant, even mid-migration.
+    """
+    if legacy:
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(legacy) - known)
+        if unknown:
+            raise TypeError(f"{where}() got unexpected keyword argument(s) "
+                            f"{', '.join(unknown)}")
+        warnings.warn(
+            f"{where}: keyword argument(s) {', '.join(sorted(legacy))} are "
+            f"deprecated; pass options={cls.__name__}(...) instead",
+            DeprecationWarning, stacklevel=3)
+        options = dataclasses.replace(options or cls(), **legacy)
+    return options if options is not None else cls()

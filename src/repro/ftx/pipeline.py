@@ -136,30 +136,35 @@ class RepairPipeline:
     """
 
     def __init__(self, store, *, spare_of: Optional[dict[int, int]] = None,
-                 mesh_rules=None, window: Optional[int] = None,
                  threads: Optional[int] = None,
                  byte_budget: Optional[int] = None,
-                 hook: Optional[PipelineHook] = None,
-                 placement=None, schedule: str = "none"):
+                 options=None, **legacy):
+        from .options import RepairOptions, resolve_options
+
+        # The legacy ``hook=`` kwarg is the options object's
+        # ``pipeline_hook`` field; translate before folding.
+        if "hook" in legacy:
+            legacy["pipeline_hook"] = legacy.pop("hook")
+        o = resolve_options(options, legacy, RepairOptions, "RepairPipeline")
         self.store = store
         self.spare_of = spare_of
-        self.mesh_rules = mesh_rules
-        self.placement = placement
+        self.mesh_rules = o.mesh_rules
+        self.placement = o.placement
         # Stripe->device-shard assignment per window ("locality" permutes
         # each window onto the shards owning its surviving blocks;
         # repro.dist.schedule). Applied at window creation, before any
         # prefetch is submitted, so the per-shard reader pools follow the
         # scheduled order automatically.
-        self.schedule = schedule
+        self.schedule = o.schedule or "none"
         cfg = store.cfg
-        self.window = int(window or cfg.pipeline_window or cfg.batch_stripes)
+        self.window = int(o.window or cfg.pipeline_window or cfg.batch_stripes)
         # Reader width is per gather shard: each simulated host prefetches
         # its own shard's blocks through its own pool (its own disks/NIC),
         # so sharded gathers scale I/O with the shard count instead of
         # funnelling every read through one host-wide pool.
         self.threads = max(1, int(threads or cfg.prefetch_threads))
         self.byte_budget = byte_budget
-        self.hook = hook or (lambda stage, index: None)
+        self.hook = o.pipeline_hook or (lambda stage, index: None)
         self._span_lock = threading.Lock()
 
     # ------------------------------------------------------------- windows

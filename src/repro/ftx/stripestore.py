@@ -34,6 +34,12 @@ from repro.core.schemes import make_scheme
 from repro.kernels.ops import default_backend as _default_backend
 from repro.serve.telemetry import LatencyRecorder
 
+from .options import RepairOptions, ServeOptions, resolve_options
+
+# Shared all-defaults ServeOptions: every read without explicit options
+# resolves its knobs through this one frozen instance.
+_DEFAULT_SERVE = ServeOptions()
+
 
 class NodeState(enum.Enum):
     UP = "up"
@@ -510,7 +516,8 @@ class StripeStore:
         return pool[0]
 
     # ------------------------------------------------------------- serving
-    def read(self, sid: int, block: int) -> np.ndarray:
+    def read(self, sid: int, block: int, *,
+             options: Optional["ServeOptions"] = None) -> np.ndarray:
         """Serve one block of one stripe, reconstructing inline if lost.
 
         The degraded-read serving path (DESIGN.md §10): live blocks are
@@ -525,13 +532,19 @@ class StripeStore:
         block is written back), and every request's wall latency lands in
         ``read_latency`` (p50/p99 telemetry).
 
+        ``options`` (:class:`repro.ftx.options.ServeOptions`) carries
+        per-request overrides of the serving knobs — coalescing and
+        hot-cache participation; ``None`` keeps the store defaults.
+
         Raises ``KeyError``/``IndexError`` for unknown stripes/blocks and
         ``IOError`` when the stripe's failure pattern is unrecoverable.
         """
-        return self.read_range(sid, block, 0, self.cfg.block_size)
+        return self.read_range(sid, block, 0, self.cfg.block_size,
+                               options=options)
 
     def read_range(self, sid: int, block: int, lo: int = 0,
-                   hi: Optional[int] = None) -> np.ndarray:
+                   hi: Optional[int] = None, *,
+                   options: Optional["ServeOptions"] = None) -> np.ndarray:
         """``read`` restricted to the byte range ``[lo, hi)`` of the block.
 
         Live blocks read only the range from disk (the §V-C byte-range
@@ -554,12 +567,12 @@ class StripeStore:
             except IOError:
                 # The node died between the down-set check and the read:
                 # take the degraded path with a fresh down-set.
-                data = self._read_degraded(sid, block)[lo:hi].copy()
+                data = self._read_degraded(sid, block, options)[lo:hi].copy()
                 self._account_read(t0, lo, hi, degraded=True)
                 return data
             self._account_read(t0, lo, hi, degraded=False)
             return data
-        data = self._read_degraded(sid, block)[lo:hi].copy()
+        data = self._read_degraded(sid, block, options)[lo:hi].copy()
         self._account_read(t0, lo, hi, degraded=True)
         return data
 
@@ -573,21 +586,25 @@ class StripeStore:
             self.telemetry.served_bytes += hi - lo
         self.read_latency.record(time.perf_counter() - t0, hi - lo)
 
-    def _read_degraded(self, sid: int, block: int) -> np.ndarray:
+    def _read_degraded(self, sid: int, block: int,
+                       options: Optional["ServeOptions"] = None) -> np.ndarray:
         """Serve a lost block: cache, then coalesce, then lead a decode.
 
         The cache probe and the in-flight registration happen under one
         lock acquisition, so there is no window in which a block is neither
         cached nor in flight while a decode for it is running: the leader
         inserts the reconstruction into the cache *before* retiring its
-        in-flight entry.
+        in-flight entry. ``options`` opts this one request out of
+        coalescing and/or cache participation.
         """
+        o = options if options is not None else _DEFAULT_SERVE
         key = (sid, block)
-        coalesce = self.cfg.coalesce_reads
+        coalesce = o.coalesce_for(self.cfg)
+        use_cache = o.cache_for(self.cfg)
         leader = False
         entry: Optional[_InflightDecode] = None
         with self._serve_lock:
-            cached = self._hot_cache.get(key)
+            cached = self._hot_cache.get(key) if use_cache else None
             if cached is not None:
                 self._hot_cache.move_to_end(key)
             elif coalesce:
@@ -612,7 +629,7 @@ class StripeStore:
                 raise entry.error
             return entry.result
         try:
-            data = self._decode_block(sid, block)
+            data = self._decode_block(sid, block, cache_self=use_cache)
             if leader:
                 entry.result = data
             return data
@@ -629,7 +646,8 @@ class StripeStore:
                     self._inflight.pop(key, None)
                 entry.event.set()
 
-    def _decode_block(self, sid: int, block: int) -> np.ndarray:
+    def _decode_block(self, sid: int, block: int, *,
+                      cache_self: bool = True) -> np.ndarray:
         """One serving-path reconstruction: plan, gather, single launch.
 
         A source node dying between plan selection and gather surfaces as
@@ -677,7 +695,8 @@ class StripeStore:
             result = None
             for t, b in enumerate(plan.targets):
                 rebuilt = out[0, t, :]
-                self._cache_put(sid, b, rebuilt)
+                if cache_self or b != block:
+                    self._cache_put(sid, b, rebuilt)
                 if b == block:
                     result = rebuilt
             assert result is not None, "plan targets must include the block"
@@ -691,16 +710,20 @@ class StripeStore:
         self.nodes[node] = NodeState.UP
 
     def repair_all(self, spare_of: Optional[dict[int, int]] = None, *,
-                   batched: bool = True, mesh_rules=None,
-                   pipeline: Optional[bool] = None,
-                   window: Optional[int] = None,
-                   pipeline_hook=None, placement=None,
-                   schedule: Optional[str] = None) -> dict:
+                   options: Optional["RepairOptions"] = None,
+                   **legacy) -> dict:
         """Rebuild every block resident on DOWN nodes onto spares (or back in
         place) using the multi-node planner. Returns telemetry for the repair
         (the paper's repair-time experiments).
 
-        ``batched=True`` (default) groups affected stripes by failure
+        Execution knobs arrive in one ``options``
+        (:class:`repro.ftx.options.RepairOptions`); the pre-PR-8 keyword
+        spellings (``batched=``, ``mesh_rules=``, ``pipeline=``,
+        ``window=``, ``pipeline_hook=``, ``placement=``, ``schedule=``)
+        still work for one deprecation cycle and fold into the options
+        object bit-identically.
+
+        ``options.batched=True`` (default) groups affected stripes by failure
         pattern and repairs each group through the batched engine — one
         compiled plan and one kernel launch per ``(pattern, chunk)`` of up to
         ``cfg.batch_stripes`` stripes — instead of one solve + one launch per
@@ -753,6 +776,12 @@ class StripeStore:
         from repro.dist.sharding import current_rules
         from repro.dist.stripes import stripe_axis_span
 
+        o = resolve_options(options, legacy, RepairOptions,
+                            "StripeStore.repair_all")
+        batched, mesh_rules = o.batched, o.mesh_rules
+        pipeline, window = o.pipeline, o.window
+        pipeline_hook, placement, schedule = (o.pipeline_hook, o.placement,
+                                              o.schedule)
         mr = mesh_rules if mesh_rules is not None else current_rules()
         if placement is None:
             placement = self.placement
@@ -811,9 +840,11 @@ class StripeStore:
             from .pipeline import RepairPipeline
 
             res = RepairPipeline(
-                self, spare_of=spare_of, mesh_rules=mr, window=window,
-                byte_budget=_BATCH_BYTE_BUDGET, hook=pipeline_hook,
-                placement=placement, schedule=schedule,
+                self, spare_of=spare_of, byte_budget=_BATCH_BYTE_BUDGET,
+                options=RepairOptions(
+                    mesh_rules=mr, window=window,
+                    pipeline_hook=pipeline_hook, placement=placement,
+                    schedule=schedule),
             ).run(work)
             launches += res.launches
             devices = max(devices, res.devices)

@@ -1,0 +1,122 @@
+"""Counter-based randomness for the fleet simulator (DESIGN.md §12).
+
+Both simulator paths — the batched epoch engine (``repro.sim.engine``) and
+the pure-Python event-loop oracle (``repro.sim.oracle``) — must consume
+*identical* random bits so their event sequences can be compared bit for
+bit. Sequential generators (``np.random.Generator``) make that impossible:
+the two paths draw in different orders (the engine batches an epoch's draws
+across trials; the oracle runs one trial to completion). The fix is
+counter-based addressing: every draw is named by a ``(trial, stream, seq)``
+triple and hashed independently through a ``jax.random.fold_in`` chain —
+order of evaluation cannot matter because there is no shared cursor.
+
+* ``stream`` identifies the renewal process (disk-``d`` lifetime, node-``i``
+  burst, per-disk latent-error arrivals, the repair channel —
+  :meth:`repro.sim.units.UnitHierarchy` assigns the ids).
+* ``seq`` counts that stream's draws within the trial.
+
+:class:`BitSource` evaluates triples through one jitted vmapped kernel —
+the engine hands it a whole epoch's triples at once (padded to power-of-two
+buckets so JAX compiles a handful of shapes, not one per epoch); the oracle
+asks for one at a time. Identical triple -> identical uint32, so the paths
+agree by construction.
+
+The uint32 -> duration transforms run in *numpy float64* and round once to
+float32 (the simulator's time grid). Keeping the transform out of JAX makes
+it exactly reproducible on any backend/donation configuration; keeping the
+grid float32 gives both paths one canonical rounding of every timestamp.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+_TRIPLE = np.dtype(np.uint32)
+
+
+@functools.lru_cache(maxsize=None)
+def _bits_kernel():
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def kernel(base, trial, stream, seq):
+        def one(tr, st, sq):
+            k = jax.random.fold_in(base, tr)
+            k = jax.random.fold_in(k, st)
+            k = jax.random.fold_in(k, sq)
+            return jax.random.bits(k, (), jnp.uint32)
+
+        return jax.vmap(one)(trial, stream, seq)
+
+    return kernel
+
+
+class BitSource:
+    """uint32 bits addressed by ``(trial, stream, seq)``, seeded once.
+
+    ``bits(triples)`` evaluates a ``(n, 3)`` uint32 array of triples in one
+    device call (padded up to a power of two — the pad lanes are computed
+    and discarded, never observed). ``bit1`` is the oracle's scalar
+    convenience.
+    """
+
+    def __init__(self, seed: int):
+        import jax
+
+        self.seed = int(seed)
+        self._base = jax.random.PRNGKey(self.seed)
+        self._kernel = _bits_kernel()
+
+    def bits(self, triples: np.ndarray) -> np.ndarray:
+        triples = np.asarray(triples, dtype=_TRIPLE).reshape(-1, 3)
+        n = len(triples)
+        if n == 0:
+            return np.zeros(0, dtype=np.uint32)
+        padded = 1 << (n - 1).bit_length()
+        if padded != n:
+            triples = np.concatenate(
+                [triples, np.zeros((padded - n, 3), dtype=_TRIPLE)])
+        out = self._kernel(self._base, triples[:, 0], triples[:, 1],
+                           triples[:, 2])
+        return np.asarray(out, dtype=np.uint32)[:n]
+
+    def bit1(self, trial: int, stream: int, seq: int) -> np.uint32:
+        return self.bits(np.array([[trial, stream, seq]], dtype=_TRIPLE))[0]
+
+
+def uniform01(bits) -> np.ndarray:
+    """uint32 -> open (0, 1) float64: ``(bits + 0.5) * 2^-32``. Strictly
+    inside the interval, so ``log1p(-u)`` below is always finite."""
+    return (np.asarray(bits, dtype=np.float64) + 0.5) * 2.0 ** -32
+
+
+def exp_hours(bits, mean_hours: float) -> np.ndarray:
+    """Exponential durations with the given mean, rounded once to the
+    float32 time grid."""
+    u = uniform01(bits)
+    return np.float32(np.float64(mean_hours) * -np.log1p(-u))
+
+
+def weibull_hours(bits, scale_hours: float, shape: float) -> np.ndarray:
+    """Weibull durations (inverse-CDF), rounded once to float32.
+    ``shape=1`` degenerates to the exponential — the calibration mode the
+    closed-form Markov chain assumes."""
+    u = uniform01(bits)
+    dur = np.float64(scale_hours) * (-np.log1p(-u)) ** (1.0 / np.float64(shape))
+    return np.float32(dur)
+
+
+def weibull_scale(mean_hours: float, shape: float) -> float:
+    """The Weibull scale whose mean is ``mean_hours`` at ``shape``:
+    ``scale = mean / Gamma(1 + 1/shape)``."""
+    from math import gamma
+
+    return float(mean_hours) / gamma(1.0 + 1.0 / float(shape))
+
+
+def later(t, dur) -> np.float32:
+    """``t + dur`` on the float32 time grid (single canonical rounding —
+    both simulator paths schedule every event through this)."""
+    return np.float32(np.float32(t) + np.float32(dur))

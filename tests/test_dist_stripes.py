@@ -140,14 +140,14 @@ def _filled_store(root, *, stripes=80, block_size=1024, batch_stripes=8):
 def test_store_sharded_repair_bit_identical_with_telemetry(tmp_path):
     """Fleet repair with mesh context: same disk bytes as unsharded, and
     telemetry reports per-device launch counts."""
-    from repro.ftx import repair_failed_nodes
+    from repro.ftx import RepairOptions, repair_failed_nodes
 
     sa = _filled_store(tmp_path / "a")
     sb = _filled_store(tmp_path / "b")
     node = sa.stripes[0].node_of_block[0]
 
     with with_rules(_mesh()) as mr:
-        rep = repair_failed_nodes(sa, [node], mesh_rules=mr)
+        rep = repair_failed_nodes(sa, [node], options=RepairOptions(mesh_rules=mr))
     assert rep.stripes_repaired > 0
     assert rep.devices == 8
     # every pattern group is an 8-stripe chunk -> every launch spans 8 devices

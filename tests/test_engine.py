@@ -237,7 +237,8 @@ def test_bit_plane_batched_kernels_lockstep(rng):
 def test_store_batched_repair_bit_identical_and_ragged(tmp_path, rng):
     """Fleet repair through the store: batched and looped paths agree on
     disk contents; batch_stripes=2 forces ragged last chunks."""
-    from repro.ftx import StoreConfig, StripeStore, repair_failed_nodes
+    from repro.ftx import (RepairOptions, StoreConfig, StripeStore,
+                           repair_failed_nodes)
 
     def build(root):
         cfg = StoreConfig(scheme="cp-azure", k=6, r=2, p=2, block_size=1024,
@@ -252,12 +253,12 @@ def test_store_batched_repair_bit_identical_and_ragged(tmp_path, rng):
     sa, sb = build(tmp_path / "a"), build(tmp_path / "b")
     node = sa.stripes[0].node_of_block[0]
 
-    rep = repair_failed_nodes(sa, [node], batched=True)
+    rep = repair_failed_nodes(sa, [node], options=RepairOptions(batched=True))
     assert rep.stripes_repaired > 0
     assert rep.plan_cache["misses"] >= 1
 
     sb.fail_node(node)
-    sb.repair_all(batched=False)
+    sb.repair_all(options=RepairOptions(batched=False))
     sb.revive_node(node)
 
     for sid in sa.stripes:
@@ -270,7 +271,7 @@ def test_store_batched_repair_bit_identical_and_ragged(tmp_path, rng):
 def test_store_unrecoverable_raises_ioerror_both_paths(tmp_path):
     """Batched and looped repair_all share the IOError contract on an
     unrecoverable stripe (batched must not leak planner RuntimeErrors)."""
-    from repro.ftx import StoreConfig, StripeStore
+    from repro.ftx import RepairOptions, StoreConfig, StripeStore
 
     cfg = StoreConfig(scheme="cp-azure", k=6, r=2, p=2, block_size=512)
     store = StripeStore(tmp_path / "s", cfg)
@@ -281,4 +282,4 @@ def test_store_unrecoverable_raises_ioerror_both_paths(tmp_path):
         store.fail_node(store.stripes[0].node_of_block[b])
     for batched in (True, False):
         with pytest.raises(IOError):
-            store.repair_all(batched=batched)
+            store.repair_all(options=RepairOptions(batched=batched))

@@ -96,7 +96,10 @@ def test_failure_injector(store, rng):
     inj = FailureInjector(store, mttf_hours=10.0, seed=1)
     events = inj.run(hours=30.0)
     assert len(events) > 0
-    assert all(e.blocks_read >= 0 for e in events)
+    # unified schema: every failure is paired with its repair-done record
+    assert len(inj.failures()) == len(inj.repairs()) > 0
+    assert all(r.blocks_read >= 0 for r in inj.repairs())
+    assert all(r.t >= r.started_at for r in inj.repairs())
 
 
 def test_restripe_elastic(tmp_path, rng):

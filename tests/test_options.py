@@ -1,0 +1,253 @@
+"""RepairOptions/ServeOptions API + deprecated-kwarg compatibility.
+
+The PR-8 satellite contract: every pre-PR-8 spelling (loose kwargs on
+``repair_all``/``repair_failed_nodes``/``RepairPipeline``, the fused
+``FailureEvent`` record) keeps working for one deprecation cycle, warns
+once, and is *bit-identical* to the options-object path — same telemetry,
+same recovered bytes.
+"""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.ftx import (FailureInjector, RepairOptions, ServeOptions,
+                       StoreConfig, StripeStore, repair_failed_nodes)
+from repro.ftx.events import (DataLossEvent, DiskFailEvent, NodeFailEvent,
+                              RackFailEvent, RepairDoneEvent, ScrubEvent,
+                              SectorErrorEvent, event_order, from_doc,
+                              sort_events, to_doc)
+from repro.ftx.failures import FailureEvent
+from repro.ftx.options import resolve_options
+from repro.ftx.pipeline import RepairPipeline
+
+
+def _twin(tmp_path, name, **cfg_over):
+    cfg = StoreConfig(scheme="cp-azure", k=6, r=2, p=2, block_size=1024,
+                      **cfg_over)
+    store = StripeStore(tmp_path / name, cfg)
+    rng = np.random.default_rng(7)
+    data = {}
+    for i in range(4):
+        payload = rng.integers(0, 256, 4000, dtype=np.uint8)
+        store.put(f"o{i}", payload.tobytes())
+        data[f"o{i}"] = payload
+    store.seal()
+    return store, data
+
+
+# --------------------------------------------------------- resolve_options
+
+def test_resolve_options_merges_and_warns():
+    with pytest.warns(DeprecationWarning, match="window.*deprecated"):
+        o = resolve_options(None, {"window": 3}, RepairOptions, "x")
+    assert o.window == 3 and o.batched is True
+    # legacy kwargs win over fields of a passed options object
+    with pytest.warns(DeprecationWarning):
+        o = resolve_options(RepairOptions(window=9, schedule="locality"),
+                            {"window": 2}, RepairOptions, "x")
+    assert o.window == 2 and o.schedule == "locality"
+    # no legacy kwargs: options object passes through untouched, no warning
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        same = RepairOptions(pipeline=True)
+        assert resolve_options(same, {}, RepairOptions, "x") is same
+        assert resolve_options(None, {}, RepairOptions, "x") == \
+            RepairOptions()
+
+
+def test_resolve_options_unknown_kwarg_raises():
+    with pytest.raises(TypeError, match="repair_all.*bogus"):
+        resolve_options(None, {"bogus": 1}, RepairOptions,
+                        "StripeStore.repair_all")
+
+
+# ------------------------------------------- repair_all legacy == options
+
+def test_repair_all_legacy_bit_identical_to_options(tmp_path):
+    results = {}
+    for mode in ("options", "legacy"):
+        store, data = _twin(tmp_path, mode, pipeline_window=2)
+        victim = store.stripes[0].node_of_block[0]
+        store.fail_node(victim)
+        if mode == "options":
+            with warnings.catch_warnings():
+                warnings.simplefilter("error", DeprecationWarning)
+                tele = store.repair_all(
+                    options=RepairOptions(pipeline=True, window=2))
+        else:
+            with pytest.warns(DeprecationWarning,
+                              match="repair_all.*pipeline.*window"):
+                tele = store.repair_all(pipeline=True, window=2)
+        store.revive_node(victim)
+        results[mode] = (tele, {k: store.get(k) for k in data})
+        for k, v in data.items():
+            assert (store.get(k) == v).all()
+    opt_tele, leg_tele = results["options"][0], results["legacy"][0]
+    assert set(opt_tele) == set(leg_tele)
+    for key in opt_tele:
+        if "seconds" in key and key != "sim_seconds":
+            continue                      # wall-clock: machine noise
+        if key == "sim_seconds":          # modeled time: float-sum order
+            assert leg_tele[key] == pytest.approx(opt_tele[key])
+        else:                             # counters: exact
+            assert leg_tele[key] == opt_tele[key], key
+    for k in results["options"][1]:
+        assert (results["options"][1][k] == results["legacy"][1][k]).all()
+
+
+def test_repair_all_unknown_kwarg(tmp_path):
+    store, _ = _twin(tmp_path, "u")
+    with pytest.raises(TypeError, match="batch_size"):
+        store.repair_all(batch_size=4)
+
+
+def test_repair_failed_nodes_legacy_matches_options(tmp_path):
+    teles = {}
+    for mode in ("options", "legacy"):
+        store, data = _twin(tmp_path, f"f{mode}")
+        victim = store.stripes[0].node_of_block[1]
+        if mode == "options":
+            rep = repair_failed_nodes(store, [victim],
+                                      options=RepairOptions(schedule="none"))
+        else:
+            with pytest.warns(DeprecationWarning):
+                rep = repair_failed_nodes(store, [victim], schedule="none")
+        teles[mode] = rep
+        for k, v in data.items():
+            assert (store.get(k) == v).all()
+    assert teles["options"].blocks_read == teles["legacy"].blocks_read
+    assert teles["options"].stripes_repaired == \
+        teles["legacy"].stripes_repaired
+
+
+def test_repair_pipeline_legacy_hook_kwarg(tmp_path):
+    store, data = _twin(tmp_path, "hook", pipeline_window=2)
+    victim = store.stripes[0].node_of_block[0]
+    store.fail_node(victim)
+    stages = []
+    with pytest.warns(DeprecationWarning, match="pipeline_hook"):
+        pipe = RepairPipeline(store, hook=lambda stage, i:
+                              stages.append(stage))
+    affected = {}
+    for sid in store.stripes:
+        down = store._down_blocks(sid)
+        if down:
+            affected.setdefault(down, []).append(sid)
+    work = [(sids, down, store.engine.planner.multi_plan(down))
+            for down, sids in affected.items()]
+    pipe.run(work)
+    store.revive_node(victim)
+    assert stages  # the translated hook actually fired
+    for k, v in data.items():
+        assert (store.get(k) == v).all()
+
+
+# ----------------------------------------------------------- ServeOptions
+
+def test_serve_options_resolution_against_config():
+    cfg = StoreConfig(k=4, r=2, p=1, coalesce_reads=True,
+                      read_cache_blocks=8)
+    assert ServeOptions().coalesce_for(cfg) is True
+    assert ServeOptions().cache_for(cfg) is True
+    assert ServeOptions(coalesce=False).coalesce_for(cfg) is False
+    assert ServeOptions(use_cache=False).cache_for(cfg) is False
+    off = StoreConfig(k=4, r=2, p=1, coalesce_reads=False,
+                      read_cache_blocks=0)
+    assert ServeOptions().coalesce_for(off) is False
+    assert ServeOptions().cache_for(off) is False
+    assert ServeOptions(use_cache=True).cache_for(off) is True
+
+
+def test_read_with_serve_options_bit_identical(tmp_path):
+    store, data = _twin(tmp_path, "serve", coalesce_reads=True,
+                        read_cache_blocks=16)
+    victim = store.stripes[0].node_of_block[0]
+    store.fail_node(victim)
+    plain = store.read(0, 0)
+    for opts in (ServeOptions(), ServeOptions(coalesce=False),
+                 ServeOptions(use_cache=False),
+                 ServeOptions(coalesce=False, use_cache=False)):
+        assert (store.read(0, 0, options=opts) == plain).all()
+
+
+def test_serve_options_cache_opt_out_counts(tmp_path):
+    store, _ = _twin(tmp_path, "cache", read_cache_blocks=16)
+    victim = store.stripes[0].node_of_block[0]
+    store.fail_node(victim)
+    no_cache = ServeOptions(use_cache=False)
+    store.read(0, 0, options=no_cache)
+    t = store.telemetry
+    before_hits = t.cache_hits
+    store.read(0, 0, options=no_cache)     # would hit if caching were on
+    assert store.telemetry.cache_hits == before_hits
+
+
+# --------------------------------------------------- FailureEvent shim
+
+def test_failure_event_shim_is_node_fail_event():
+    with pytest.warns(DeprecationWarning, match="FailureEvent"):
+        ev = FailureEvent(t=3.0, node=2, repaired_at=4.5, blocks_read=12,
+                          sim_seconds=5400.0, local=True)
+    assert isinstance(ev, NodeFailEvent)
+    assert ev.t == 3.0 and ev.node == 2 and ev.repaired_at == 4.5
+    assert ev.blocks_read == 12 and ev.local is True
+
+
+def test_injector_log_has_no_deprecation_warnings(tmp_path):
+    store, _ = _twin(tmp_path, "inj")
+    inj = FailureInjector(store, mttf_hours=8.0, seed=1)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        events = inj.run(hours=20.0)
+    assert events and all(not isinstance(e, FailureEvent) for e in events)
+
+
+def test_injector_replay_consumes_foreign_trace(tmp_path):
+    src_store, _ = _twin(tmp_path, "src")
+    src = FailureInjector(src_store, mttf_hours=8.0, seed=3)
+    trace = src.run(hours=25.0)
+    dst_store, data = _twin(tmp_path, "dst")
+    dst = FailureInjector(dst_store, seed=0)
+    replayed = dst.replay(trace)
+    assert len(dst.failures()) == len(src.failures())
+    assert len(dst.repairs()) == len(dst.failures())
+    # repairs re-executed against *this* store: costs are its own
+    assert all(r.blocks_read > 0 for r in dst.repairs())
+    for k, v in data.items():
+        assert (dst_store.get(k) == v).all()
+    assert replayed == dst.events
+
+
+# --------------------------------------------------- event schema round-trip
+
+def test_event_doc_roundtrip():
+    events = [
+        DiskFailEvent(t=1.5, disk=3, node=1, rack=0),
+        NodeFailEvent(t=2.0, node=1, rack=0),
+        RackFailEvent(t=2.0, rack=4),
+        SectorErrorEvent(t=0.25, disk=2, block=7),
+        ScrubEvent(t=9.0),
+        RepairDoneEvent(t=3.5, unit=3, kind="disk", started_at=2.0,
+                        blocks_read=6, sim_seconds=5400.0, local=True),
+        DataLossEvent(t=11.0, blocks=(0, 4, 7)),
+    ]
+    for ev in events:
+        doc = to_doc(ev)
+        assert isinstance(doc, dict) and "event" in doc
+        assert from_doc(doc) == ev
+    # the discriminator never clobbers a field: RepairDoneEvent.kind is
+    # the repaired unit's level and survives the round-trip
+    rd = to_doc(events[5])
+    assert rd["event"] == "repair_done" and rd["kind"] == "disk"
+
+
+def test_sort_events_canonical_order():
+    tie_a = NodeFailEvent(t=2.0, node=1)
+    tie_b = RackFailEvent(t=2.0, rack=0)     # same t: rack ranks after node
+    out = sort_events([ScrubEvent(t=9.0), tie_b, tie_a,
+                       DiskFailEvent(t=0.5, disk=0)])
+    assert [type(e).__name__ for e in out] == [
+        "DiskFailEvent", "NodeFailEvent", "RackFailEvent", "ScrubEvent"]
+    assert event_order(tie_a) < event_order(tie_b)

@@ -17,8 +17,8 @@ import numpy as np
 import pytest
 
 from _prop import given, settings, st
-from repro.ftx import (FailureInjector, StoreConfig, StripeStore,
-                       repair_failed_nodes)
+from repro.ftx import (FailureInjector, RepairOptions, StoreConfig,
+                       StripeStore, repair_failed_nodes)
 
 REPO = Path(__file__).resolve().parent.parent
 
@@ -51,8 +51,8 @@ def test_pipelined_bit_identical_single_node(tmp_path):
     sa = _build(tmp_path / "a")
     sb = _build(tmp_path / "b")
     node = sa.stripes[0].node_of_block[0]
-    rep = repair_failed_nodes(sa, [node], pipeline=True)
-    rep_b = repair_failed_nodes(sb, [node], pipeline=False)
+    rep = repair_failed_nodes(sa, [node], options=RepairOptions(pipeline=True))
+    rep_b = repair_failed_nodes(sb, [node], options=RepairOptions(pipeline=False))
     assert rep.pipelined and not rep_b.pipelined
     assert rep.windows > 1 and rep_b.windows == 0
     assert rep.stripes_repaired == rep_b.stripes_repaired > 0
@@ -69,8 +69,8 @@ def test_pipelined_bit_identical_multi_node(tmp_path):
     sb = _build(tmp_path / "b")
     n0 = sa.stripes[0].node_of_block[0]
     n1 = sa.stripes[0].node_of_block[sa.scheme.k]   # a local parity's node
-    rep = repair_failed_nodes(sa, [n0, n1], pipeline=True)
-    rep_b = repair_failed_nodes(sb, [n0, n1], pipeline=False)
+    rep = repair_failed_nodes(sa, [n0, n1], options=RepairOptions(pipeline=True))
+    rep_b = repair_failed_nodes(sb, [n0, n1], options=RepairOptions(pipeline=False))
     assert rep.stripes_repaired == rep_b.stripes_repaired > 0
     assert rep.blocks_read == rep_b.blocks_read
     assert _all_blocks(sa) == _all_blocks(sb)
@@ -83,11 +83,11 @@ def test_pipeline_ragged_windows_and_window_override(tmp_path):
     sb = _build(tmp_path / "b", stripes=30)
     node = sa.stripes[0].node_of_block[2]
     sa.fail_node(node)
-    tele = sa.repair_all(window=3)
+    tele = sa.repair_all(options=RepairOptions(window=3))
     sa.revive_node(node)
     assert tele["pipelined"] and tele["windows"] >= len(sa.stripes) // 3 - 1
     sb.fail_node(node)
-    sb.repair_all(pipeline=False)
+    sb.repair_all(options=RepairOptions(pipeline=False))
     sb.revive_node(node)
     assert _all_blocks(sa) == _all_blocks(sb)
 
@@ -96,7 +96,7 @@ def test_pipeline_ragged_windows_and_window_override(tmp_path):
 def test_pipeline_span_telemetry_observable(tmp_path):
     store = _build(tmp_path / "s", io_stall_scale=0.02)
     node = store.stripes[0].node_of_block[0]
-    rep = repair_failed_nodes(store, [node], pipeline=True)
+    rep = repair_failed_nodes(store, [node], options=RepairOptions(pipeline=True))
     assert rep.pipelined
     assert rep.read_seconds > 0
     assert rep.compute_seconds > 0
@@ -105,7 +105,7 @@ def test_pipeline_span_telemetry_observable(tmp_path):
     assert 0.0 <= rep.overlap_ratio <= 1.0
     assert store.engine.last_exec_seconds > 0
     # sync path accounts the same spans, serially (overlap telemetry ~0)
-    rep_b = repair_failed_nodes(store, [node], pipeline=False)
+    rep_b = repair_failed_nodes(store, [node], options=RepairOptions(pipeline=False))
     assert rep_b.read_seconds > 0 and rep_b.compute_seconds > 0
     assert rep_b.windows == 0 and rep_b.replans == 0
 
@@ -118,7 +118,7 @@ def test_sync_fallback_config_knob(tmp_path):
     store.fail_node(node)
     tele = store.repair_all()
     assert not tele["pipelined"]
-    tele = store.repair_all(pipeline=True)
+    tele = store.repair_all(options=RepairOptions(pipeline=True))
     assert tele["pipelined"]
     store.revive_node(node)
 
@@ -128,7 +128,7 @@ def test_pipelined_unrecoverable_raises_ioerror(tmp_path):
     for b in range(5):                      # beyond p+r: never decodable
         store.fail_node(store.stripes[0].node_of_block[b])
     with pytest.raises(IOError):
-        store.repair_all(pipeline=True)
+        store.repair_all(options=RepairOptions(pipeline=True))
 
 
 def test_partial_repair_before_unrecoverable_pattern(tmp_path):
@@ -154,7 +154,7 @@ def test_partial_repair_before_unrecoverable_pattern(tmp_path):
         assert len(store._down_blocks(1)) == 5
         assert len(store._down_blocks(0)) == 1
         with pytest.raises(IOError):
-            store.repair_all(pipeline=pipe)
+            store.repair_all(options=RepairOptions(pipeline=pipe))
         repaired = store.telemetry.repairs_local + store.telemetry.repairs_global
         assert repaired == 1, "the feasible group sorted first must repair"
     assert _all_blocks(sa) == _all_blocks(sb)
@@ -195,7 +195,7 @@ def test_node_failure_between_prefetch_and_launch_bit_identical(
                 fired.append(index)
                 store.fail_node(second)
 
-        tele = store.repair_all(pipeline=True, pipeline_hook=hook)
+        tele = store.repair_all(options=RepairOptions(pipeline=True, pipeline_hook=hook))
         assert tele["pipelined"]
         store.revive_node(node)
         store.revive_node(second)
@@ -237,13 +237,13 @@ def test_pipelined_sharded_repair_bit_identical(tmp_path):
     sb = _build(tmp_path / "b", stripes=80)
     node = sa.stripes[0].node_of_block[0]
     with with_rules(jax.make_mesh((8, 1), ("data", "model"))):
-        rep = repair_failed_nodes(sa, [node], pipeline=True)
+        rep = repair_failed_nodes(sa, [node], options=RepairOptions(pipeline=True))
     assert rep.pipelined
     assert rep.devices == 8
     # round-robin placement makes every pattern group 8 stripes -> every
     # window is one full-span launch
     assert rep.device_launches == 8 * rep.launches
-    rep_b = repair_failed_nodes(sb, [node], pipeline=False)
+    rep_b = repair_failed_nodes(sb, [node], options=RepairOptions(pipeline=False))
     assert rep_b.devices == 1
     assert _all_blocks(sa) == _all_blocks(sb)
 

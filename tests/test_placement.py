@@ -12,7 +12,8 @@ import pytest
 from repro.dist.placement import PlacementMap, assemble_shards, shard_layout
 from repro.dist.sharding import with_rules
 from repro.dist.stripes import align_stripe_window, stripe_axis_span
-from repro.ftx import StoreConfig, StripeStore, repair_failed_nodes
+from repro.ftx import (RepairOptions, StoreConfig, StripeStore,
+                       repair_failed_nodes)
 
 multidevice = pytest.mark.skipif(
     len(jax.devices()) < 8,
@@ -183,10 +184,10 @@ def test_remote_multiplier_inflates_sim_time(tmp_path):
         shard_of_node=PlacementMap.from_store(sb, num_shards=2).shard_of_node,
         remote_multiplier=4.0,
         node_of=lambda sid, b: sb.stripes[sid].node_of_block[b])
-    rep_a = repair_failed_nodes(sa, [node], placement=cheap)
+    rep_a = repair_failed_nodes(sa, [node], options=RepairOptions(placement=cheap))
     # shard 0 gathers everything (span 1) but half the nodes are shard 1:
     # those reads are remote and 4x as expensive in simulated time
-    rep_b = repair_failed_nodes(sb, [node], placement=costly)
+    rep_b = repair_failed_nodes(sb, [node], options=RepairOptions(placement=costly))
     assert rep_a.remote_reads == 0 and rep_b.remote_reads > 0
     assert rep_b.sim_seconds > rep_a.sim_seconds * 1.5
     assert rep_a.blocks_read == rep_b.blocks_read
@@ -213,9 +214,9 @@ def test_sharded_gather_repair_bit_identical(tmp_path):
     sc = _build(tmp_path / "c")                      # unsharded reference
     node = sa.stripes[0].node_of_block[0]
     with with_rules(_mesh()):
-        rep_a = repair_failed_nodes(sa, [node], pipeline=True)
-        rep_b = repair_failed_nodes(sb, [node], pipeline=False)
-    rep_c = repair_failed_nodes(sc, [node], pipeline=False)
+        rep_a = repair_failed_nodes(sa, [node], options=RepairOptions(pipeline=True))
+        rep_b = repair_failed_nodes(sb, [node], options=RepairOptions(pipeline=False))
+    rep_c = repair_failed_nodes(sc, [node], options=RepairOptions(pipeline=False))
     assert rep_a.devices == rep_b.devices == 8
     assert rep_c.devices == 1
     truth = _all_blocks(sc)
@@ -243,8 +244,8 @@ def test_sharded_gather_sim_time_unchanged_at_unity_multiplier(tmp_path):
     sb = _build(tmp_path / "b")
     node = sa.stripes[0].node_of_block[0]
     with with_rules(_mesh()):
-        rep = repair_failed_nodes(sa, [node], pipeline=True)
-    rep_b = repair_failed_nodes(sb, [node], pipeline=False)
+        rep = repair_failed_nodes(sa, [node], options=RepairOptions(pipeline=True))
+    rep_b = repair_failed_nodes(sb, [node], options=RepairOptions(pipeline=False))
     assert rep.sim_seconds == pytest.approx(rep_b.sim_seconds)
 
 
@@ -256,9 +257,9 @@ def test_ragged_window_degrades_to_single_shard_gather(tmp_path):
     sb = _build(tmp_path / "b", stripes=50, batch_stripes=5)
     node = sa.stripes[0].node_of_block[0]
     with with_rules(_mesh()):
-        rep = repair_failed_nodes(sa, [node], pipeline=True)
+        rep = repair_failed_nodes(sa, [node], options=RepairOptions(pipeline=True))
     assert rep.devices == 1              # every 5-stripe window degraded
     assert set(rep.gather_bytes_per_shard) == {0}
-    rep_b = repair_failed_nodes(sb, [node], pipeline=False)
+    rep_b = repair_failed_nodes(sb, [node], options=RepairOptions(pipeline=False))
     assert _all_blocks(sa) == _all_blocks(sb)
     assert rep.blocks_read == rep_b.blocks_read

@@ -15,7 +15,8 @@ import pytest
 
 from repro.core.planner import RepairPlanner
 from repro.core.schemes import make_scheme
-from repro.ftx import StoreConfig, StripeStore, repair_failed_nodes
+from repro.ftx import (RepairOptions, StoreConfig, StripeStore,
+                       repair_failed_nodes)
 
 
 def _build(root, stripes=20):
@@ -47,7 +48,7 @@ def test_concurrent_repair_all_shares_planner_consistently(tmp_path):
 
     def worker():
         barrier.wait()
-        return store.repair_all(pipeline=False)
+        return store.repair_all(options=RepairOptions(pipeline=False))
 
     with ThreadPoolExecutor(4) as pool:
         futures = [pool.submit(worker) for _ in range(4)]
@@ -98,7 +99,7 @@ def test_repair_all_concurrent_with_degraded_reads(tmp_path):
 
     def repairer():
         barrier.wait()
-        return store.repair_all(pipeline=False)
+        return store.repair_all(options=RepairOptions(pipeline=False))
 
     with ThreadPoolExecutor(9) as pool:
         futures = [pool.submit(reader, seed) for seed in range(8)]
@@ -160,10 +161,10 @@ def test_pipelined_repair_threads_share_planner(tmp_path):
     then all hits (plans survived the concurrent phase)."""
     store = _build(tmp_path / "s")
     node = store.stripes[0].node_of_block[0]
-    rep = repair_failed_nodes(store, [node], pipeline=True)
+    rep = repair_failed_nodes(store, [node], options=RepairOptions(pipeline=True))
     assert rep.pipelined and rep.stripes_repaired > 0
     assert rep.plan_cache["hits"] + rep.plan_cache["misses"] > 0
-    rep2 = repair_failed_nodes(store, [node], pipeline=True)
+    rep2 = repair_failed_nodes(store, [node], options=RepairOptions(pipeline=True))
     assert rep2.plan_cache["misses"] == 0
     assert rep2.plan_cache["hits"] > 0
 

@@ -23,7 +23,8 @@ from repro.dist.schedule import chunk_affinity, schedule_chunk
 from repro.dist.sharding import with_rules
 from repro.dist.topology import (POLICIES, Topology, place_stripe,
                                  placement_from_topology)
-from repro.ftx import StoreConfig, StripeStore, repair_failed_nodes
+from repro.ftx import (RepairOptions, StoreConfig, StripeStore,
+                       repair_failed_nodes)
 
 REPO = Path(__file__).resolve().parent.parent
 
@@ -145,7 +146,7 @@ def test_store_rejects_unknown_policy_and_schedule(tmp_path):
         StripeStore(tmp_path / "b", StoreConfig(stripe_schedule="bogus"))
     store = StripeStore(tmp_path / "c", StoreConfig(k=6, r=2, p=2))
     with pytest.raises(ValueError):
-        store.repair_all(schedule="bogus")
+        store.repair_all(options=RepairOptions(schedule="bogus"))
 
 
 def test_store_topology_mismatch_raises(tmp_path):
@@ -253,8 +254,8 @@ def test_scheduled_repair_bit_identical_one_device(tmp_path):
     sa = _build(tmp_path / "a", stripes=40)
     sb = _build(tmp_path / "b", stripes=40)
     node = sa.stripes[0].node_of_block[0]
-    rep = repair_failed_nodes(sa, [node], schedule="locality")
-    rep_b = repair_failed_nodes(sb, [node], schedule="none")
+    rep = repair_failed_nodes(sa, [node], options=RepairOptions(schedule="locality"))
+    rep_b = repair_failed_nodes(sb, [node], options=RepairOptions(schedule="none"))
     assert rep.schedule == "locality" and rep_b.schedule == "none"
     assert rep.blocks_read == rep_b.blocks_read
     assert rep.scheduled_local_read_fraction == \
@@ -268,7 +269,7 @@ def test_schedule_defaults_from_config(tmp_path):
     node = store.stripes[0].node_of_block[0]
     rep = repair_failed_nodes(store, [node])
     assert rep.schedule == "none"
-    rep = repair_failed_nodes(store, [node], schedule="locality")
+    rep = repair_failed_nodes(store, [node], options=RepairOptions(schedule="locality"))
     assert rep.schedule == "locality"
 
 
@@ -283,12 +284,15 @@ def test_scheduled_repair_bit_identical_and_uplifts_8dev(tmp_path):
     sc = _build(tmp_path / "c")                      # scheduled, sync
     node = sa.stripes[0].node_of_block[0]
     with with_rules(_mesh()):
-        rep = repair_failed_nodes(sa, [node], pipeline=True,
-                                  schedule="locality")
-        rep_b = repair_failed_nodes(sb, [node], pipeline=False,
-                                    schedule="none")
-        rep_c = repair_failed_nodes(sc, [node], pipeline=False,
-                                    schedule="locality")
+        rep = repair_failed_nodes(
+            sa, [node], options=RepairOptions(pipeline=True,
+                                              schedule="locality"))
+        rep_b = repair_failed_nodes(
+            sb, [node], options=RepairOptions(pipeline=False,
+                                              schedule="none"))
+        rep_c = repair_failed_nodes(
+            sc, [node], options=RepairOptions(pipeline=False,
+                                              schedule="locality"))
     truth = _all_blocks(sb)
     assert _all_blocks(sa) == truth
     assert _all_blocks(sc) == truth
@@ -327,8 +331,8 @@ def test_degenerate_placement_keeps_contiguous_order(tmp_path):
     sa, sb = build(tmp_path / "a"), build(tmp_path / "b")
     node = sa.stripes[0].node_of_block[0]
     with with_rules(_mesh()):
-        rep = repair_failed_nodes(sa, [node], schedule="locality")
-        rep_b = repair_failed_nodes(sb, [node], schedule="none")
+        rep = repair_failed_nodes(sa, [node], options=RepairOptions(schedule="locality"))
+        rep_b = repair_failed_nodes(sb, [node], options=RepairOptions(schedule="none"))
     assert rep.schedule_uplift == 1.0
     assert rep.local_read_fraction == rep_b.local_read_fraction
     assert _all_blocks(sa) == _all_blocks(sb)
@@ -347,9 +351,10 @@ def test_property_scheduled_repair_bit_identical(block_idx, pipelined):
         sb = _build(Path(tmp) / "b", stripes=80)
         node = sa.stripes[0].node_of_block[block_idx]
         with with_rules(_mesh()):
-            repair_failed_nodes(sa, [node], pipeline=pipelined,
-                                schedule="locality")
-        repair_failed_nodes(sb, [node], pipeline=False, schedule="none")
+            repair_failed_nodes(
+                sa, [node], options=RepairOptions(pipeline=pipelined,
+                                                  schedule="locality"))
+        repair_failed_nodes(sb, [node], options=RepairOptions(pipeline=False, schedule="none"))
         assert _all_blocks(sa) == _all_blocks(sb)
 
 

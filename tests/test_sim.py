@@ -1,0 +1,254 @@
+"""Event-driven fleet reliability simulator (repro.sim)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.reliability import (HOURS_PER_YEAR, ReliabilityParams,
+                                    stripe_mttdl_years)
+from repro.core.schemes import make_scheme
+from repro.dist.topology import Topology
+from repro.sim import (BitSource, SimParams, StripeModel, UnitHierarchy,
+                       calibrated, measured_bandwidth, simulate,
+                       simulate_oracle, weibull_scale)
+from repro.sim.rng import exp_hours, weibull_hours
+
+# Accelerated single-failure-mode environment: azure(4,2,1) has every
+# pattern up to p+r decodable (q = [0,0,0,0,1]), so the Markov chain is
+# exact and paper == strict — the cross-validation configuration.
+_REL = ReliabilityParams(node_mttf_years=0.02, bandwidth_gbps=0.002,
+                         detect_hours_single=2.0, detect_hours_multi=10.0)
+
+
+def _params(**over) -> SimParams:
+    base = dict(disk_mttf_hours=_REL.node_mttf_years * HOURS_PER_YEAR,
+                weibull_shape=1.0, model="paper", cost_model="average",
+                reliability=_REL)
+    base.update(over)
+    return SimParams(**base)
+
+
+# --------------------------------------------------------------- rng layer
+
+def test_bits_batch_matches_scalar_and_padding():
+    src = BitSource(seed=42)
+    triples = np.array([[0, 0, 0], [0, 0, 1], [3, 7, 2], [9, 1, 0],
+                        [2, 2, 2]], np.uint32)  # 5 rows -> padded to 8
+    batch = src.bits(triples)
+    for row, got in zip(triples, batch):
+        assert src.bit1(*map(int, row)) == got
+    # distinct triples give distinct draws (overwhelmingly)
+    assert len(set(batch.tolist())) == len(batch)
+    assert src.bits(np.zeros((0, 3), np.uint32)).size == 0
+
+
+def test_weibull_shape_one_is_exponential():
+    bits = BitSource(0).bits(np.stack([np.zeros(64, np.uint32),
+                                       np.zeros(64, np.uint32),
+                                       np.arange(64, dtype=np.uint32)],
+                                      axis=1))
+    assert np.array_equal(exp_hours(bits, 100.0),
+                          weibull_hours(bits, weibull_scale(100.0, 1.0),
+                                        1.0))
+
+
+def test_weibull_scale_mean():
+    # shape 2: scale = mean / Gamma(1.5)
+    from math import gamma
+    assert weibull_scale(100.0, 2.0) == pytest.approx(100.0 / gamma(1.5))
+
+
+# --------------------------------------------------------------- hierarchy
+
+def test_hierarchy_default_and_streams():
+    h = UnitHierarchy.from_topology(10)
+    assert h.num_disks == 10 and h.num_nodes == 10 and h.num_racks == 1
+    streams = ([h.stream_disk_fail(d) for d in range(10)]
+               + [h.stream_node_fail(i) for i in range(h.num_nodes)]
+               + [h.stream_rack_fail(j) for j in range(h.num_racks)]
+               + [h.stream_lse(d) for d in range(10)] + [h.stream_repair])
+    assert len(set(streams)) == len(streams)  # no stream collisions
+
+
+def test_hierarchy_from_topology_policies():
+    topo = Topology(num_nodes=12, num_domains=3)
+    for policy in ("contiguous", "spread", "round_robin"):
+        h = UnitHierarchy.from_topology(8, topo, policy)
+        assert h.num_disks == 8
+        for node in range(h.num_nodes):
+            for d in h.disks_of_node(node):
+                assert h.node_of_disk[d] == node
+        covered = sorted(d for j in range(h.num_racks)
+                         for d in h.disks_of_rack(j))
+        assert covered == list(range(8))
+
+
+def test_stripe_model_memoizes_and_prices():
+    sch = make_scheme("cp-azure", 6, 2, 2)
+    m = StripeModel(sch, _params(cost_model="planner"))
+    assert m.decodable(frozenset()) and m.decodable(frozenset({0}))
+    assert not m.decodable(frozenset(range(sch.p + sch.r + 1)))
+    one = m.cost_blocks(frozenset({0}))
+    assert one >= 1 and m.cost_blocks(frozenset({0})) == one  # cached
+    assert m.tau_hours(frozenset({0})) > 0
+    avg = StripeModel(sch, _params())
+    assert avg.cost_blocks(frozenset({3})) == avg.cost_blocks(
+        frozenset({1}))  # average mode prices by failure count only
+
+
+def test_sim_params_validation():
+    with pytest.raises(ValueError):
+        _params(model="bogus")
+    with pytest.raises(ValueError):
+        _params(cost_model="exact")
+    with pytest.raises(ValueError):
+        _params(weibull_shape=0.0)
+
+
+# ------------------------------------------------- engine vs oracle parity
+
+def test_engine_bit_identical_to_oracle_all_processes():
+    """The acceptance bar: batched epochs == pure-Python event loop, bit
+    for bit, with bursts, latent errors, scrubbing, Weibull lifetimes and
+    planner repair costs all switched on."""
+    sch = make_scheme("azure", 4, 2, 1)
+    topo = Topology(num_nodes=8, num_domains=2)
+    hier = UnitHierarchy.from_topology(sch.n, topo, "spread")
+    params = _params(disk_mttf_hours=400.0, weibull_shape=1.4,
+                     node_burst_hours=900.0, rack_burst_hours=4000.0,
+                     lse_hours=700.0, scrub_hours=300.0, model="strict",
+                     cost_model="planner")
+    kw = dict(trials=6, horizon_hours=5000.0, seed=3, hierarchy=hier,
+              record_events=True)
+    a = simulate(sch, params, **kw)
+    b = simulate_oracle(sch, params, **kw)
+    assert a.counts == b.counts
+    assert a.observed_hours == b.observed_hours
+    assert sorted(a.loss_times) == sorted(b.loss_times)
+    for log_a, log_b in zip(a.event_log, b.event_log):
+        assert log_a == log_b
+    assert a.events == b.events
+    assert a.epochs < a.events  # the engine actually batched
+
+
+def test_engine_bit_identical_paper_model_with_thinning():
+    sch = make_scheme("azure", 6, 2, 1)  # q[3] > 0: thinning can trigger
+    params = _params(disk_mttf_hours=100.0)
+    kw = dict(trials=40, horizon_hours=6000.0, seed=3, record_events=True)
+    a = simulate(sch, params, **kw)
+    b = simulate_oracle(sch, params, **kw)
+    assert a.rejected == b.rejected > 0
+    assert a.counts == b.counts
+    for log_a, log_b in zip(a.event_log, b.event_log):
+        assert log_a == log_b
+
+
+def test_determinism_and_seed_sensitivity():
+    sch = make_scheme("azure", 4, 2, 1)
+    kw = dict(trials=20, horizon_hours=3000.0, record_events=True)
+    a = simulate(sch, _params(), seed=7, **kw)
+    b = simulate(sch, _params(), seed=7, **kw)
+    c = simulate(sch, _params(), seed=8, **kw)
+    assert a.event_log == b.event_log
+    assert a.observed_hours == b.observed_hours
+    assert a.event_log != c.event_log
+
+
+# ------------------------------------------------- closed-form validation
+
+def test_simulated_mttdl_matches_markov_chain():
+    """Property the tentpole promises: on the calibrated single-failure-
+    mode config the simulator reproduces core/reliability.py's closed-form
+    MTTDL (exponential-MLE estimate, seeded, CI-stable tolerance)."""
+    sch = make_scheme("azure", 4, 2, 1)
+    chain = stripe_mttdl_years(sch, _REL, model="paper")
+    res = simulate(sch, _params(), trials=800, horizon_hours=8000.0,
+                   seed=11)
+    assert res.losses > 300  # enough losses for a tight MLE
+    ratio = res.mttdl_years / chain
+    assert 0.80 < ratio < 1.25
+    # paper == strict on this config (no undecodable pattern below p+r+1)
+    strict = simulate(sch, _params(model="strict"), trials=100,
+                      horizon_hours=4000.0, seed=11)
+    paper = simulate(sch, _params(), trials=100, horizon_hours=4000.0,
+                     seed=11)
+    assert strict.observed_hours == paper.observed_hours
+    assert strict.losses == paper.losses and paper.rejected == 0
+
+
+def test_paper_model_thinning_slows_descent():
+    """azure(6,2,1) has undecodable 3-patterns: the paper chain rejects
+    them (slower descent), the strict chain loses — the simulator must
+    show the same divergence, in the same direction."""
+    sch = make_scheme("azure", 6, 2, 1)
+    kw = dict(trials=400, horizon_hours=6000.0, seed=5)
+    paper = simulate(sch, _params(disk_mttf_hours=175.0), **kw)
+    strict = simulate(sch, _params(disk_mttf_hours=175.0, model="strict"),
+                      **kw)
+    assert paper.rejected > 0 and strict.rejected == 0
+    assert paper.mttdl_years > strict.mttdl_years
+
+
+def test_lse_and_scrub_semantics():
+    """Latent errors alone can lose data; scrubbing heals them."""
+    sch = make_scheme("azure", 4, 2, 1)
+    quiet = _params(disk_mttf_hours=1e9, lse_hours=200.0)
+    kw = dict(trials=30, horizon_hours=4000.0, seed=2)
+    unscrubbed = simulate(sch, quiet, **kw)
+    assert unscrubbed.counts["sector_error"] > 0
+    assert unscrubbed.losses > 0          # 4 latent errors -> undecodable
+    scrubbed = simulate(sch, dataclasses.replace(quiet, scrub_hours=20.0),
+                        **kw)
+    assert scrubbed.counts["scrub"] > 0
+    assert scrubbed.losses < unscrubbed.losses
+
+
+def test_burst_failures_respect_hierarchy():
+    """A node burst downs every disk the node holds at once — wide
+    placement (more nodes per stripe) survives bursts that kill a
+    concentrated placement."""
+    sch = make_scheme("azure", 6, 2, 2)
+    # default ReliabilityParams: repairs finish in minutes, so the wide
+    # placement never overlaps enough bursts to lose data
+    quiet = _params(disk_mttf_hours=1e9, node_burst_hours=300.0,
+                    reliability=ReliabilityParams())
+    kw = dict(trials=25, horizon_hours=3000.0, seed=4)
+    # every disk on its own node: a burst is a single-disk failure
+    wide = simulate(sch, quiet, **kw)
+    # all 10 blocks on 2 nodes: one burst erases 5 blocks -> loss
+    packed = UnitHierarchy(node_of_disk=tuple(d % 2 for d in range(sch.n)),
+                           rack_of_node=(0, 0))
+    narrow = simulate(sch, quiet, hierarchy=packed, **kw)
+    assert wide.losses == 0
+    assert narrow.losses > 0
+
+
+def test_mttdl_estimator_censoring():
+    sch = make_scheme("azure", 4, 2, 1)
+    res = simulate(sch, _params(disk_mttf_hours=1e9), trials=10,
+                   horizon_hours=100.0, seed=0)
+    assert res.losses == 0
+    assert res.mttdl_years == float("inf")
+    assert res.observed_hours == pytest.approx(10 * 100.0)
+
+
+# ------------------------------------------------------------- calibration
+
+def test_measured_bandwidth_and_calibrated_params():
+    tele = {"bytes_read": 2_000_000_000, "sim_seconds": 8.0}
+    assert measured_bandwidth(tele) == pytest.approx(2.0)
+    rel = calibrated(_REL, tele)
+    assert rel.bandwidth_gbps == pytest.approx(2.0)
+    assert rel.node_mttf_years == _REL.node_mttf_years
+    with pytest.raises(ValueError):
+        measured_bandwidth({"bytes_read": 1, "sim_seconds": 0.0})
+
+
+def test_measure_repair_bandwidth_real_pipeline(tmp_path):
+    from repro.ftx import StoreConfig
+    from repro.sim import measure_repair_bandwidth
+    tele = measure_repair_bandwidth(
+        tmp_path, StoreConfig(scheme="cp-azure", k=4, r=2, p=1,
+                              block_size=1024), objects=2)
+    assert tele["gbps"] > 0
+    assert tele["bytes_read"] > 0
