@@ -1,11 +1,40 @@
-"""Framework integration: EC-checkpoint encode + failure-repair cost for a
-training state of each (reduced) architecture, CP-Azure vs Azure."""
+"""Async EC checkpointing vs 3x replication (the PR-9 tentpole numbers).
+
+For a training state of each (reduced) architecture:
+
+  save    — sync (serial encode, training blocked end-to-end) vs async
+            (``save_async``: snapshot on the training thread, windowed
+            encode + drain in the background while a simulated training
+            loop keeps stepping). The persistence medium is made slow via
+            ``EncodePipeline``'s ``drain_stall``, calibrated to the
+            measured per-window encode compute of the same store — the
+            simulated-stall config, where hiding the encode matters.
+            Headline: **steps stalled per checkpoint** and the fraction of
+            the save wall that training kept running (overlap fraction).
+
+  restore — after losing a data-holding host, the parallel degraded
+            restore (per-host reader pools + serving-plan decodes fed from
+            the restore buffer) vs a 3x-replication baseline. Replication
+            stores every data block three times; after a host loss it must
+            re-read the full state (``data_blocks``) and re-replicate the
+            lost host's share (``3 * data_blocks / n`` block copies) —
+            the EC restore must read **strictly fewer blocks** (counted,
+            not timed: both sides are deterministic functions of the
+            state size and geometry). Simulated restore time uses the same
+            per-link model for both.
+
+Both headline metrics are asserted here (overlap fraction > 0.5, EC blocks
+< replication blocks) and floored in the CI regression gate
+(``check_regression.py`` section ``ckpt_stripes``).
+"""
 from __future__ import annotations
 
 import shutil
 import tempfile
+import time
 
 import jax
+import numpy as np
 
 from repro.configs import ARCHS, get_model
 from repro.ftx.checkpoint import CheckpointConfig, CheckpointManager
@@ -14,34 +43,135 @@ from repro.train.optimizer import adamw_init
 
 from ._util import csv
 
+SCHEME = "cp-azure"
+GEOM = (8, 2, 2)
+BLOCK = 1 << 16
+ENCODE_WINDOW = 2
+REPLICAS = 3
+STEP_SECONDS = 0.02          # one simulated train step
+ACCEPT_OVERLAP = 0.5         # min fraction of save wall overlapped
+
+
+def _tree_equal(a, b) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb))
+
+
+def _bench_arch(arch: str) -> dict:
+    k, r, p = GEOM
+    api = get_model(arch, smoke=True)
+    params = api.init_params(jax.random.key(0))
+    state = {"params": params, "opt": adamw_init(params)}
+    tmp = tempfile.mkdtemp(prefix="bench_ck_")
+    try:
+        cm = CheckpointManager(tmp, CheckpointConfig(
+            store=StoreConfig(scheme=SCHEME, k=k, r=r, p=p, block_size=BLOCK),
+            encode_window=ENCODE_WINDOW))
+        # Calibrate the simulated-stall config: one stall-free save
+        # measures this machine's per-window encode compute; the drain
+        # stall makes persistence cost about as much — the regime where a
+        # synchronous save visibly stalls training.
+        cal = cm.save(1, state)
+        stall = max(0.01, cal["encode"]["compute_seconds"]
+                    / max(1, cal["encode"]["windows"]))
+
+        # Sync save: serial stages, training blocked for the whole wall.
+        t0 = time.perf_counter()
+        cm.save_async(2, state, pipelined=False, drain_stall=stall).result()
+        sync_wall = time.perf_counter() - t0
+
+        # Async save: training stalls only for the snapshot, then keeps
+        # stepping until the background encode seals.
+        t0 = time.perf_counter()
+        fut = cm.save_async(3, state, drain_stall=stall)
+        t_ret = time.perf_counter()
+        steps_during = 0
+        while not fut.done():
+            time.sleep(STEP_SECONDS)     # one simulated train step
+            steps_during += 1
+        t_done = time.perf_counter()
+        info = fut.result()
+        save_wall = t_done - t0
+        overlap_fraction = (t_done - t_ret) / save_wall
+
+        # Restore after losing a data-holding host.
+        store = cm.store_for(3)
+        victim = store.stripes[0].node_of_block[0]
+        cm.fail_hosts(3, [victim])
+        got, tele = cm.restore(3, state)
+        assert _tree_equal(got, state), f"{arch}: degraded restore corrupt"
+        ser, tele_ser = cm.restore(3, state, parallel=False)
+        assert _tree_equal(ser, state)
+
+        n = store.scheme.n
+        cfg = store.cfg
+        data_blocks = -(-info["bytes"] // BLOCK)
+        # Replication baseline: full re-read + re-replicating the lost
+        # host's share of the 3x copies, in blocks (counted, not timed).
+        baseline_blocks = data_blocks + -(-REPLICAS * data_blocks // n)
+        mean_lat_s = float(np.mean(list(store.latency_ms.values()))) / 1e3
+        per_block_s = BLOCK * 8 / (cfg.bandwidth_gbps * 1e9) + mean_lat_s
+        baseline_sim = baseline_blocks * per_block_s
+        assert tele["blocks_read"] < baseline_blocks, (
+            f"{arch}: EC restore read {tele['blocks_read']} blocks, "
+            f"replication baseline {baseline_blocks}")
+
+        row = {
+            "state_mb": info["bytes"] / 1e6,
+            "stripes": info["stripes"],
+            "encode_windows": info["encode"]["windows"],
+            "drain_stall_s": stall,
+            # --- steps stalled per checkpoint ---
+            "sync_save_wall_s": sync_wall,
+            "async_snapshot_s": fut.snapshot_seconds,
+            "async_save_wall_s": save_wall,
+            "steps_stalled_sync": sync_wall / STEP_SECONDS,
+            "steps_stalled_async": fut.snapshot_seconds / STEP_SECONDS,
+            "steps_ran_during_async_encode": steps_during,
+            "train_overlap_fraction": overlap_fraction,
+            "encode_pipeline_overlap_fraction":
+                info["encode"]["overlap_fraction"],
+            # --- restore after host loss ---
+            "restore_blocks_ec": tele["blocks_read"],
+            "restore_blocks_replication": baseline_blocks,
+            "restore_blocks_ratio": baseline_blocks / tele["blocks_read"],
+            "restore_degraded_blocks": tele["degraded_blocks"],
+            "restore_extra_source_reads": tele["extra_source_reads"],
+            "restore_sim_s_ec": tele["sim_seconds"],
+            "restore_sim_s_replication": baseline_sim,
+            "restore_wall_parallel_s": tele["restore_seconds"],
+            "restore_wall_serial_s": tele_ser["restore_seconds"],
+        }
+        csv(f"ckpt/{arch}/{SCHEME}", save_wall * 1e6,
+            f"state={row['state_mb']:.1f}MB "
+            f"stalled_steps={row['steps_stalled_async']:.2f}"
+            f"(sync={row['steps_stalled_sync']:.1f}) "
+            f"overlap={overlap_fraction:.0%} "
+            f"restore_blocks={tele['blocks_read']}"
+            f"(repl={baseline_blocks})")
+        return row
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
 
 def run(fast: bool = False) -> dict:
-    archs = ARCHS[:2] if fast else ARCHS[:6]
-    out = {}
-    for arch in archs:
-        api = get_model(arch, smoke=True)
-        params = api.init_params(jax.random.key(0))
-        state = {"params": params, "opt": adamw_init(params)}
-        for scheme in ("azure", "cp-azure"):
-            tmp = tempfile.mkdtemp(prefix="bench_ck_")
-            try:
-                cm = CheckpointManager(tmp, CheckpointConfig(
-                    store=StoreConfig(scheme=scheme, k=8, r=2, p=2,
-                                      block_size=1 << 17)))
-                info = cm.save(1, state)
-                # lose the host holding the last parity + one data host
-                store = cm.store_for(1)
-                gr_node = store.stripes[0].node_of_block[store.scheme.n - 1]
-                cm.fail_hosts(1, [gr_node])
-                tele = cm.repair(1)
-                out[f"{arch}/{scheme}"] = {
-                    "state_mb": info["bytes"] / 1e6,
-                    "encode_s": info["encode_seconds"],
-                    "repair_blocks": tele["blocks_read"],
-                    "repair_sim_s": tele["sim_seconds"]}
-                csv(f"ckpt/{arch}/{scheme}", info["encode_seconds"] * 1e6,
-                    f"state={info['bytes'] / 1e6:.1f}MB "
-                    f"parity_repair_blocks={tele['blocks_read']}")
-            finally:
-                shutil.rmtree(tmp, ignore_errors=True)
-    return out
+    archs = ARCHS[:2] if fast else ARCHS[:4]
+    rows = {arch: _bench_arch(arch) for arch in archs}
+    min_overlap = min(r["train_overlap_fraction"] for r in rows.values())
+    min_ratio = min(r["restore_blocks_ratio"] for r in rows.values())
+    min_stall_reduction = min(
+        r["steps_stalled_sync"] / max(r["steps_stalled_async"], 1e-9)
+        for r in rows.values())
+    assert min_overlap > ACCEPT_OVERLAP, (
+        f"encode-overlap fraction {min_overlap:.2f} <= {ACCEPT_OVERLAP}")
+    print(f"min train-overlap fraction: {min_overlap:.2f} "
+          f"(acceptance: > {ACCEPT_OVERLAP}); "
+          f"min replication/EC restore-blocks ratio: {min_ratio:.2f} "
+          f"(acceptance: > 1)")
+    return {"scheme": SCHEME, "geometry": GEOM, "block_size": BLOCK,
+            "step_seconds": STEP_SECONDS, "rows": rows,
+            "min_train_overlap_fraction": min_overlap,
+            "min_restore_blocks_ratio": min_ratio,
+            "min_stall_reduction": min_stall_reduction,
+            "accept_overlap": ACCEPT_OVERLAP}

@@ -6,12 +6,15 @@ repaired with the paper's local-first algorithms at local-group bandwidth
 instead of k-block global reads.
 """
 from .options import RepairOptions, ServeOptions  # noqa: F401
-from .stripestore import NodeState, StripeStore, StoreConfig  # noqa: F401
-from .checkpoint import CheckpointManager  # noqa: F401
+from .stripestore import (NodeState, StripeStore,  # noqa: F401
+                          StripeStreamWriter, StoreConfig)
+from .checkpoint import (CheckpointConfig, CheckpointFuture,  # noqa: F401
+                         CheckpointManager)
 from .events import (DataLossEvent, DiskFailEvent, FleetEvent,  # noqa: F401
                      NodeFailEvent, RackFailEvent, RepairDoneEvent,
                      ScrubEvent, SectorErrorEvent)
 from .failures import FailureInjector  # noqa: F401
 from .fleet import (DegradedReadReport, FleetRepairReport,  # noqa: F401
                     read_report, repair_failed_nodes)
-from .pipeline import PipelineResult, RepairPipeline  # noqa: F401
+from .pipeline import (EncodePipeline, PipelineResult,  # noqa: F401
+                       RepairPipeline, run_double_buffered)

@@ -17,8 +17,6 @@ wide-stripe generation cost that StripeMerge-style systems optimize).
 """
 from __future__ import annotations
 
-import dataclasses
-import warnings
 from typing import Iterable, Optional
 
 import numpy as np
@@ -26,29 +24,7 @@ import numpy as np
 from .events import (FleetEvent, NodeFailEvent, RepairDoneEvent,
                      sort_events)
 from .options import RepairOptions
-from .stripestore import NodeState, StoreConfig, StripeStore
-
-
-@dataclasses.dataclass(frozen=True)
-class FailureEvent(NodeFailEvent):
-    """Deprecated pre-PR-8 record fusing a node failure with its repair.
-
-    Kept so old constructor kwargs (``t=, node=, repaired_at=,
-    blocks_read=, sim_seconds=, local=``) keep working; it now *is* a
-    :class:`~repro.ftx.events.NodeFailEvent`, so code that migrated to the
-    unified schema classifies it correctly. Construct the schema types
-    directly instead.
-    """
-    repaired_at: float = 0.0
-    blocks_read: int = 0
-    sim_seconds: float = 0.0
-    local: bool = True
-
-    def __post_init__(self):
-        warnings.warn(
-            "repro.ftx.failures.FailureEvent is deprecated: use the "
-            "repro.ftx.events schema (NodeFailEvent + RepairDoneEvent)",
-            DeprecationWarning, stacklevel=3)
+from .stripestore import StoreConfig, StripeStore
 
 
 class FailureInjector:

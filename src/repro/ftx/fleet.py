@@ -24,7 +24,7 @@ from typing import Iterable, Optional
 from repro.core.reliability import ReliabilityParams, stripe_mttdl_years
 from repro.core.schemes import make_scheme
 
-from .options import RepairOptions, resolve_options
+from .options import RepairOptions
 
 
 @dataclasses.dataclass(frozen=True)
@@ -259,17 +259,15 @@ def read_report(store, *, reset: bool = False) -> DegradedReadReport:
 def repair_failed_nodes(store, nodes: Iterable[int], *,
                         spare_of: Optional[dict[int, int]] = None,
                         revive: bool = True,
-                        options: Optional[RepairOptions] = None,
-                        **legacy) -> FleetRepairReport:
+                        options: Optional[RepairOptions] = None
+                        ) -> FleetRepairReport:
     """Fail ``nodes`` and rebuild every affected stripe in the store.
 
     All stripes whose blocks lived on the failed nodes are grouped by
     failure pattern and repaired through the store's batched engine — one
     launch per (pattern, chunk). ``options``
     (:class:`repro.ftx.options.RepairOptions`) carries the execution
-    knobs; the pre-PR-8 spellings (``batched=``, ``mesh_rules=``,
-    ``pipeline=``, ``window=``, ``placement=``, ``schedule=``) still work
-    for one deprecation cycle.
+    knobs.
 
     ``options.pipeline`` (default: on when ``cfg.pipeline_window > 0``)
     overlaps each window's disk reads, device launch and write-back
@@ -293,8 +291,7 @@ def repair_failed_nodes(store, nodes: Iterable[int], *,
     difference observable. ``revive`` marks the nodes UP again after
     the rebuild (blocks were re-materialized in place or onto spares).
     """
-    o = resolve_options(options, legacy, RepairOptions,
-                        "repair_failed_nodes")
+    o = options if options is not None else RepairOptions()
     nodes = tuple(nodes)
     for node in nodes:
         store.fail_node(node)

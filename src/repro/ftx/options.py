@@ -13,19 +13,14 @@ collapses the knobs into two frozen dataclasses:
 * :class:`ServeOptions` — how to serve a (possibly degraded) read:
   per-request overrides of the store-config coalescing/cache knobs.
 
-All entry points now take ``options=``; the legacy kwargs are still
-accepted for one deprecation cycle through :func:`resolve_options`, which
-folds them into an options object (explicit legacy kwargs win over the
-``options`` value, matching what the old call sites expressed) and emits a
-single ``DeprecationWarning``. The fold is pure field substitution —
-``dataclasses.replace`` — so a legacy call and its options-object spelling
-are *the same object* by construction; the bit-identity tests in
-``tests/test_options.py`` pin that.
+All entry points take ``options=`` exclusively. The pre-PR-8 loose kwargs
+were accepted (with a ``DeprecationWarning``) for the one promised cycle
+and deleted in PR 9; passing them now raises ``TypeError`` like any other
+unknown keyword.
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Any, Callable, Optional
 
 
@@ -68,28 +63,3 @@ class ServeOptions:
     def cache_for(self, cfg) -> bool:
         return (cfg.read_cache_blocks > 0 if self.use_cache is None
                 else self.use_cache)
-
-
-def resolve_options(options, legacy: dict, cls, where: str):
-    """Fold deprecated keyword arguments into an options object.
-
-    ``legacy`` holds only the kwargs the caller actually passed (the
-    ``**legacy`` dict of the accepting function), so passing a legacy kwarg
-    at its default value still round-trips exactly. Unknown names raise
-    ``TypeError`` like a real signature would; any known name emits one
-    ``DeprecationWarning`` naming the replacement. Explicit legacy kwargs
-    override the same field on ``options`` — the old spelling keeps meaning
-    what it always meant, even mid-migration.
-    """
-    if legacy:
-        known = {f.name for f in dataclasses.fields(cls)}
-        unknown = sorted(set(legacy) - known)
-        if unknown:
-            raise TypeError(f"{where}() got unexpected keyword argument(s) "
-                            f"{', '.join(unknown)}")
-        warnings.warn(
-            f"{where}: keyword argument(s) {', '.join(sorted(legacy))} are "
-            f"deprecated; pass options={cls.__name__}(...) instead",
-            DeprecationWarning, stacklevel=3)
-        options = dataclasses.replace(options or cls(), **legacy)
-    return options if options is not None else cls()

@@ -71,6 +71,51 @@ from repro.dist.stripes import align_stripe_window, stripe_axis_span
 PipelineHook = Callable[[str, int], None]
 
 
+def run_double_buffered(windows: Sequence, *, produce, consume,
+                        writer: ThreadPoolExecutor) -> None:
+    """The double-buffer loop shared by every windowed pipeline.
+
+    Repair runs it forward (read → decode → write-back) and checkpoint
+    encode runs it "in reverse" (pack → encode → persist); the loop itself
+    is direction-agnostic:
+
+    * ``produce(win)`` submits asynchronous production of ``win``'s input
+      (reader-pool prefetch, host packing, ...) and returns a token;
+    * ``consume(win, token)`` waits the token out, runs the window's
+      device work, and returns either ``None`` (the window was handled
+      entirely inline — e.g. a repair re-plan) or a zero-argument drain
+      callable;
+    * the drain callable runs on the dedicated ``writer`` thread,
+      overlapped with the next window's consume.
+
+    Window *i+1*'s production is always submitted before window *i* is
+    consumed, so at steady state three consecutive windows are in flight:
+    one producing, one computing, one draining. Drain errors surface after
+    the last window (every future's result is collected).
+    """
+    drains: list[Future] = []
+    pending = produce(windows[0]) if windows else None
+    for i, win in enumerate(windows):
+        nxt = produce(windows[i + 1]) if i + 1 < len(windows) else None
+        drain = consume(win, pending)
+        if drain is not None:
+            drains.append(writer.submit(drain))
+        pending = nxt
+    wait(drains)
+    for f in drains:
+        f.result()                       # surface writer-thread errors
+
+
+def _record_span(lock: threading.Lock, res: "PipelineResult", stage: str,
+                 index: int, t0: float, t1: float) -> None:
+    """Append a stage span and bump its aggregate, under the result lock
+    (stages land from the coordinator, packer and writer threads)."""
+    with lock:
+        res.spans.append((stage, index, t0, t1))
+        setattr(res, f"{stage}_seconds",
+                getattr(res, f"{stage}_seconds") + (t1 - t0))
+
+
 @dataclasses.dataclass(frozen=True)
 class RepairWindow:
     """One pipeline unit: a slice of stripes sharing a failure pattern."""
@@ -138,14 +183,10 @@ class RepairPipeline:
     def __init__(self, store, *, spare_of: Optional[dict[int, int]] = None,
                  threads: Optional[int] = None,
                  byte_budget: Optional[int] = None,
-                 options=None, **legacy):
-        from .options import RepairOptions, resolve_options
+                 options=None):
+        from .options import RepairOptions
 
-        # The legacy ``hook=`` kwarg is the options object's
-        # ``pipeline_hook`` field; translate before folding.
-        if "hook" in legacy:
-            legacy["pipeline_hook"] = legacy.pop("hook")
-        o = resolve_options(options, legacy, RepairOptions, "RepairPipeline")
+        o = options if options is not None else RepairOptions()
         self.store = store
         self.spare_of = spare_of
         self.mesh_rules = o.mesh_rules
@@ -269,10 +310,7 @@ class RepairPipeline:
 
     def _span(self, res: PipelineResult, stage: str, index: int,
               t0: float, t1: float) -> None:
-        with self._span_lock:
-            res.spans.append((stage, index, t0, t1))
-            setattr(res, f"{stage}_seconds",
-                    getattr(res, f"{stage}_seconds") + (t1 - t0))
+        _record_span(self._span_lock, res, stage, index, t0, t1)
 
     # ------------------------------------------------------------- replan
     def _replan(self, pools: list[ThreadPoolExecutor], win: RepairWindow,
@@ -333,26 +371,170 @@ class RepairPipeline:
                 for s in range(num_pools)]
             writer = stack.enter_context(ThreadPoolExecutor(
                 1, thread_name_prefix="repair-write"))
-            writes: list[Future] = []
-            cur = self._prefetch(readers, windows[0])
-            self.hook("prefetch", 0)
-            for i, win in enumerate(windows):
-                nxt = None
-                if i + 1 < len(windows):
-                    nxt = self._prefetch(readers, windows[i + 1])
-                    self.hook("prefetch", i + 1)
-                stacked = self._collect(cur, res)
-                self.hook("launch", i)
+
+            def produce(win: RepairWindow) -> _Fetch:
+                fetch = self._prefetch(readers, win)
+                self.hook("prefetch", win.index)
+                return fetch
+
+            def consume(win: RepairWindow, fetch: _Fetch):
+                stacked = self._collect(fetch, res)
+                self.hook("launch", win.index)
                 if stacked is None:
                     self._replan(readers, win, res)
-                else:
-                    rebuilt = self._launch(win, stacked, res)
-                    writes.append(writer.submit(self._writeback, win,
-                                                rebuilt, res))
-                    self.hook("writeback", i)
-                cur = nxt
-            wait(writes)
-            for f in writes:
-                f.result()                   # surface writer-thread errors
+                    return None
+                rebuilt = self._launch(win, stacked, res)
+                self.hook("writeback", win.index)
+                return lambda: self._writeback(win, rebuilt, res)
+
+            run_double_buffered(windows, produce=produce, consume=consume,
+                                writer=writer)
+        res.wall_seconds = time.perf_counter() - t_run
+        return res
+
+
+@dataclasses.dataclass(frozen=True)
+class EncodeWindow:
+    """One encode-pipeline unit: a run of consecutive stream stripes and
+    the byte range of the snapshot buffer that fills them."""
+    index: int
+    first: int                             # first stream stripe
+    count: int                             # stripes in this window
+    lo: int                                # snapshot byte range [lo, hi)
+    hi: int
+
+
+class EncodePipeline:
+    """The repair pipeline run in reverse: stream a frozen host buffer
+    through batched encode into a store's streaming put path.
+
+    The stage machinery is :func:`run_double_buffered` with the data flow
+    mirrored — instead of reader pools filling a batch from disk for the
+    decoder, a packer thread slices window *i+1*'s ``(S, k, B)`` plaintext
+    batch out of the snapshot buffer (zero-padding the tail stripe exactly
+    like ``seal``), window *i* encodes through
+    ``BatchedCodecEngine.encode`` (MeshRules-sharded, any backend), and
+    window *i-1*'s encoded stripes drain to disk on the writer thread via
+    :meth:`StripeStreamWriter.write_window`. Chunking reuses
+    ``launch_step`` (byte-budget-capped, mesh-span-aligned), so encode
+    launches shard exactly like repair launches.
+
+    Spans land in the same :class:`PipelineResult` vocabulary as repair:
+    ``read_seconds`` is host packing, ``compute_seconds`` encode + device
+    copy-off, ``write_seconds`` the drain, and ``overlap_seconds`` the
+    stall the double buffer hides — the checkpoint benchmark's
+    encode-overlap fraction is ``overlap / busy``.
+
+    ``pipelined=False`` runs the identical stages strictly in sequence
+    (the benchmark's serial baseline); bytes are identical either way.
+    ``drain_stall`` sleeps that many wall seconds per drained window —
+    the write-side analogue of ``StoreConfig.io_stall_scale``, making a
+    slow persistence medium wall-real for overlap experiments.
+
+    ``hook(stage, window_index)`` fires at "pack" (slice submitted),
+    "encode" (window encoded), "drain" (window persisted) — tests use it
+    to crash saves at precise pipeline points.
+    """
+
+    def __init__(self, store, *, window: Optional[int] = None,
+                 mesh_rules=None, hook: Optional[PipelineHook] = None,
+                 pipelined: bool = True, drain_stall: float = 0.0):
+        self.store = store
+        cfg = store.cfg
+        self.mesh_rules = mesh_rules
+        self.window = int(window or cfg.pipeline_window or cfg.batch_stripes)
+        self.hook = hook or (lambda stage, index: None)
+        self.pipelined = pipelined
+        self.drain_stall = float(drain_stall)
+        self._span_lock = threading.Lock()
+
+    # ------------------------------------------------------------- windows
+    def _windows(self, total_stripes: int) -> list[EncodeWindow]:
+        from .stripestore import launch_step
+
+        cfg = self.store.cfg
+        # The "reads" of an encode window are the n blocks it will hold on
+        # the host at once (k plaintext in, n encoded out).
+        step = align_stripe_window(
+            launch_step(cfg, self.store.n, self.window), self.mesh_rules)
+        extent = cfg.k * cfg.block_size
+        out: list[EncodeWindow] = []
+        for first in range(0, total_stripes, step):
+            count = min(step, total_stripes - first)
+            out.append(EncodeWindow(len(out), first, count,
+                                    first * extent, (first + count) * extent))
+        return out
+
+    # ------------------------------------------------------------- stages
+    def _pack(self, flat: np.ndarray, win: EncodeWindow) -> np.ndarray:
+        """Slice + zero-pad one window's plaintext batch off the snapshot."""
+        cfg = self.store.cfg
+        batch = np.zeros(win.count * cfg.k * cfg.block_size, np.uint8)
+        src = flat[win.lo:min(win.hi, len(flat))]
+        batch[:len(src)] = src
+        return batch.reshape(win.count, cfg.k, cfg.block_size)
+
+    def _encode(self, win: EncodeWindow, batch: np.ndarray,
+                res: PipelineResult) -> np.ndarray:
+        engine = self.store.engine
+        t0 = time.perf_counter()
+        out = np.asarray(engine.encode(batch, self.mesh_rules))
+        t1 = time.perf_counter()
+        _record_span(self._span_lock, res, "compute", win.index, t0, t1)
+        res.launches += 1
+        res.devices = max(res.devices, engine.last_span)
+        res.device_launches += engine.last_span
+        return out
+
+    def _drain(self, stream, win: EncodeWindow, encoded: np.ndarray,
+               res: PipelineResult) -> None:
+        t0 = time.perf_counter()
+        stream.write_window(win.first, encoded)
+        if self.drain_stall > 0.0:
+            time.sleep(self.drain_stall)
+        t1 = time.perf_counter()
+        _record_span(self._span_lock, res, "write", win.index, t0, t1)
+        self.hook("drain", win.index)
+
+    # ---------------------------------------------------------------- run
+    def run(self, stream, flat: np.ndarray) -> PipelineResult:
+        """Encode ``flat`` (the frozen snapshot bytes) into ``stream`` (a
+        :class:`StripeStreamWriter` sized for it). The caller closes or
+        aborts the stream — on error this raises with windows possibly
+        half-drained, and the stream refuses to ``close``."""
+        flat = np.asarray(flat, np.uint8).reshape(-1)
+        res = PipelineResult()
+        windows = self._windows(stream.num_stripes)
+        res.windows = len(windows)
+        if not windows:
+            return res
+        t_run = time.perf_counter()
+        with contextlib.ExitStack() as stack:
+            packer = stack.enter_context(ThreadPoolExecutor(
+                1, thread_name_prefix="ckpt-pack"))
+            writer = stack.enter_context(ThreadPoolExecutor(
+                1, thread_name_prefix="ckpt-write"))
+
+            def produce(win: EncodeWindow):
+                t0 = time.perf_counter()
+                fut = packer.submit(self._pack, flat, win)
+                self.hook("pack", win.index)
+                return (fut, t0)
+
+            def consume(win: EncodeWindow, token):
+                fut, t0 = token
+                batch = fut.result()
+                _record_span(self._span_lock, res, "read", win.index,
+                             t0, time.perf_counter())
+                encoded = self._encode(win, batch, res)
+                self.hook("encode", win.index)
+                return lambda: self._drain(stream, win, encoded, res)
+
+            if self.pipelined:
+                run_double_buffered(windows, produce=produce,
+                                    consume=consume, writer=writer)
+            else:
+                for win in windows:        # serial baseline: no overlap
+                    consume(win, produce(win))()
         res.wall_seconds = time.perf_counter() - t_run
         return res

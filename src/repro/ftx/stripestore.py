@@ -22,7 +22,7 @@ import threading
 import time
 from collections import OrderedDict
 from pathlib import Path
-from typing import Iterable, Optional
+from typing import Optional
 
 import numpy as np
 
@@ -34,7 +34,7 @@ from repro.core.schemes import make_scheme
 from repro.kernels.ops import default_backend as _default_backend
 from repro.serve.telemetry import LatencyRecorder
 
-from .options import RepairOptions, ServeOptions, resolve_options
+from .options import RepairOptions, ServeOptions
 
 # Shared all-defaults ServeOptions: every read without explicit options
 # resolves its knobs through this one frozen instance.
@@ -391,7 +391,7 @@ class StripeStore:
                 return first_meta
             cur_key = cur_key + "#cont"
 
-    def _open(self) -> None:
+    def _alloc_stripe(self) -> int:
         from repro.dist.topology import place_stripe
 
         sid = self._next_sid
@@ -402,7 +402,10 @@ class StripeStore:
         placement = place_stripe(self.cfg.placement_policy, self.topology,
                                  sid, self.n)
         self.stripes[sid] = Stripe(sid=sid, node_of_block=placement)
-        self._open_sid = sid
+        return sid
+
+    def _open(self) -> None:
+        self._open_sid = self._alloc_stripe()
         self._open_fill = 0
         self._open_buf = np.zeros(self.cfg.k * self.cfg.block_size, np.uint8)
 
@@ -428,6 +431,19 @@ class StripeStore:
             self._write_block(sid, b, stripe[b])
         self._open_sid = None
         self._open_fill = 0
+
+    def stream_writer(self, key: str, total_bytes: int) -> "StripeStreamWriter":
+        """Open the streaming put path: pre-allocate every stripe for a
+        ``total_bytes``-sized object so fully *encoded* windows can be
+        persisted — in any order, from a writer thread — while upstream
+        windows are still encoding (the checkpoint pipeline's drain stage).
+        ``close()`` registers exactly the object chain ``put`` + ``seal``
+        would have produced (head key plus ``#cont`` continuations, one per
+        stripe, zero-padded tail), so ``get``/``read_range`` serve streamed
+        bytes identically to packed ones."""
+        if self._open_sid is not None:
+            raise RuntimeError("seal() the open stripe before stream_writer")
+        return StripeStreamWriter(self, key, int(total_bytes))
 
     # ------------------------------------------------------------- reads
     def get(self, key: str) -> np.ndarray:
@@ -710,18 +726,14 @@ class StripeStore:
         self.nodes[node] = NodeState.UP
 
     def repair_all(self, spare_of: Optional[dict[int, int]] = None, *,
-                   options: Optional["RepairOptions"] = None,
-                   **legacy) -> dict:
+                   options: Optional["RepairOptions"] = None) -> dict:
         """Rebuild every block resident on DOWN nodes onto spares (or back in
         place) using the multi-node planner. Returns telemetry for the repair
         (the paper's repair-time experiments).
 
         Execution knobs arrive in one ``options``
-        (:class:`repro.ftx.options.RepairOptions`); the pre-PR-8 keyword
-        spellings (``batched=``, ``mesh_rules=``, ``pipeline=``,
-        ``window=``, ``pipeline_hook=``, ``placement=``, ``schedule=``)
-        still work for one deprecation cycle and fold into the options
-        object bit-identically.
+        (:class:`repro.ftx.options.RepairOptions`); the pre-PR-8 loose
+        keyword spellings were removed after their one deprecation cycle.
 
         ``options.batched=True`` (default) groups affected stripes by failure
         pattern and repairs each group through the batched engine — one
@@ -776,8 +788,7 @@ class StripeStore:
         from repro.dist.sharding import current_rules
         from repro.dist.stripes import stripe_axis_span
 
-        o = resolve_options(options, legacy, RepairOptions,
-                            "StripeStore.repair_all")
+        o = options if options is not None else RepairOptions()
         batched, mesh_rules = o.batched, o.mesh_rules
         pipeline, window = o.pipeline, o.window
         pipeline_hook, placement, schedule = (o.pipeline_hook, o.placement,
@@ -1049,3 +1060,93 @@ class StripeStore:
         for k, m in manifest["objects"].items():
             store.objects[k] = ObjectMeta(**m)
         return store
+
+
+class StripeStreamWriter:
+    """Streaming put path: persist pre-encoded stripes for one object.
+
+    ``put`` buffers plaintext on the coordinator and ``seal`` encodes one
+    stripe at a time; the checkpoint encode pipeline instead produces whole
+    ``(S, n, B)`` *encoded* windows off the batched engine and drains them
+    from a writer thread while later windows are still encoding. This
+    writer pre-allocates all stripes (ids + policy-driven placement) for a
+    known object size up front — cheap host bookkeeping, no buffers — then
+    accepts encoded windows in any order from any thread. ``close``
+    registers the exact object chain ``put`` + ``seal`` would have written
+    (head key plus ``#cont`` continuations, one stripe-extent object per
+    stripe, zero-padded tail), so the streamed object reads back
+    byte-identically through ``get``/``read_range``.
+    """
+
+    def __init__(self, store: StripeStore, key: str, total_bytes: int):
+        if total_bytes < 0:
+            raise ValueError("total_bytes must be >= 0")
+        if key in store.objects:
+            raise ValueError(f"object {key!r} already exists")
+        self.store = store
+        self.key = key
+        self.total_bytes = total_bytes
+        extent = store.cfg.k * store.cfg.block_size
+        # A zero-byte object still occupies one (all-zeros) stripe, same as
+        # put() opening a stripe for it.
+        self.num_stripes = max(1, -(-total_bytes // extent))
+        self.sids = [store._alloc_stripe() for _ in range(self.num_stripes)]
+        self._written: set[int] = set()
+        self._lock = threading.Lock()
+        self._closed = False
+
+    def write_window(self, first: int, encoded: np.ndarray) -> None:
+        """Persist ``encoded`` — shape ``(S, n, block_size)``, already
+        through the codec — as stream stripes ``first .. first+S-1``.
+        Thread-safe; windows may land in any order."""
+        enc = np.asarray(encoded, np.uint8)
+        n, B = self.store.n, self.store.cfg.block_size
+        if enc.ndim != 3 or enc.shape[1:] != (n, B):
+            raise ValueError(f"window shape {enc.shape} != (S, {n}, {B})")
+        if first < 0 or first + enc.shape[0] > self.num_stripes:
+            raise ValueError(f"window [{first}, {first + enc.shape[0]}) "
+                             f"outside {self.num_stripes}-stripe stream")
+        for i in range(enc.shape[0]):
+            sid = self.sids[first + i]
+            for b in range(n):
+                self.store._write_block(sid, b, enc[i, b])
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("stream writer already closed")
+            self._written.update(range(first, first + enc.shape[0]))
+
+    def close(self) -> None:
+        """Register the object chain. Every stripe must have been written —
+        a partial stream must ``abort()`` instead."""
+        with self._lock:
+            if self._closed:
+                return
+            missing = self.num_stripes - len(self._written)
+            if missing:
+                raise RuntimeError(f"cannot close stream: {missing} of "
+                                   f"{self.num_stripes} stripes unwritten")
+            self._closed = True
+        extent = self.store.cfg.k * self.store.cfg.block_size
+        remaining = self.total_bytes
+        cur = self.key
+        for sid in self.sids:
+            take = min(extent, remaining)
+            self.store.objects[cur] = ObjectMeta(key=cur, size=take, sid=sid,
+                                                 block=0, offset=0)
+            remaining -= take
+            cur = cur + "#cont"
+
+    def abort(self) -> None:
+        """Drop the allocated stripes (and any block files already written)
+        so a failed encode leaves no phantom stripes behind."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+        for sid in self.sids:
+            st = self.store.stripes.pop(sid, None)
+            if st is None:
+                continue
+            for b, node in enumerate(st.node_of_block):
+                path = self.store.root / f"node{node}" / f"s{sid}_b{b}.blk"
+                path.unlink(missing_ok=True)

@@ -13,7 +13,6 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from repro.configs import get_model
 from repro.data.pipeline import DataConfig, make_pipeline
@@ -36,6 +35,10 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--ckpt-async", action="store_true",
+                    help="asynchronous checkpointing: snapshot the state "
+                         "(one host copy), then encode + persist in the "
+                         "background while training continues")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-scheme", default="cp-azure")
     ap.add_argument("--kill-host", type=int, default=-1,
@@ -66,19 +69,46 @@ def main() -> None:
         opt_state = adamw_init(params)
         step_fn = jax.jit(make_train_step(api, tc), donate_argnums=(0, 1))
         t0 = time.time()
+        pending = None                    # (CheckpointFuture, submit step)
+
+        def collect(at_step: int) -> None:
+            """Join the in-flight async save and report what it overlapped."""
+            nonlocal pending
+            if pending is None:
+                return
+            fut, submit_step = pending
+            pending = None
+            info = fut.result()
+            enc = info["encode"]
+            print(f"  [ckpt] step {fut.step}: {info['bytes']/1e6:.1f} MB "
+                  f"encoded async in {info['encode_seconds']:.2f}s "
+                  f"(train stalled {fut.snapshot_seconds*1e3:.1f}ms for the "
+                  f"snapshot, encode overlap {enc['overlap_fraction']:.0%}, "
+                  f"{at_step - submit_step} steps ran during encode)",
+                  flush=True)
+
         for step in range(args.steps):
             batch = jax.tree.map(jax.numpy.asarray, data.batch_at(step))
             params, opt_state, metrics = step_fn(params, opt_state, batch)
+            if pending and pending[0].done():
+                collect(step)
             if step % 10 == 0 or step == args.steps - 1:
                 print(f"step {step:4d} loss={float(metrics['loss']):.4f} "
                       f"gnorm={float(metrics['grad_norm']):.3f} "
                       f"lr={float(metrics['lr']):.2e} "
                       f"({(time.time() - t0):.1f}s)", flush=True)
             if cm and step and step % args.ckpt_every == 0:
-                info = cm.save(step, {"params": params, "opt": opt_state})
-                print(f"  [ckpt] step {step}: {info['bytes']/1e6:.1f} MB "
-                      f"encoded in {info['encode_seconds']:.2f}s", flush=True)
+                if args.ckpt_async:
+                    collect(step)         # at most one save in flight
+                    pending = (cm.save_async(
+                        step, {"params": params, "opt": opt_state}), step)
+                else:
+                    info = cm.save(step, {"params": params, "opt": opt_state})
+                    print(f"  [ckpt] step {step}: {info['bytes']/1e6:.1f} MB "
+                          f"encoded in {info['encode_seconds']:.2f}s",
+                          flush=True)
                 if args.kill_host >= 0:
+                    collect(step)         # seal before failing its hosts
                     print(f"  [ftx ] killing host {args.kill_host}, "
                           f"restoring via CP-LRC repair", flush=True)
                     cm.fail_hosts(step, [args.kill_host])
@@ -88,6 +118,7 @@ def main() -> None:
                     opt_state = jax.tree.map(jax.numpy.asarray, state["opt"])
                     print(f"  [ftx ] restored: {tele}", flush=True)
                     args.kill_host = -1  # once
+        collect(args.steps)
         print(f"done: {args.steps} steps in {time.time() - t0:.1f}s")
 
 

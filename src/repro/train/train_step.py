@@ -14,6 +14,7 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.dist.sharding import MeshRules, _resolve, opt_state_sharding
@@ -76,6 +77,19 @@ def train_shardings(api: ModelApi, mr: MeshRules, batch_specs: dict) -> dict:
         "opt_state": opt_shardings(api, mr, ps),
         "batch": batch_shardings(batch_specs, mr),
     }
+
+
+def snapshot_for_checkpoint(state: PyTree) -> PyTree:
+    """Device→host snapshot of train state for asynchronous checkpointing.
+
+    Every leaf is copied into a fresh host array, so the returned tree
+    aliases no device buffer: the next ``train_step`` may overwrite or
+    donate its inputs while the checkpoint manager's background encode is
+    still reading the snapshot. ``CheckpointManager.save_async`` performs
+    an equivalent copy while flattening, so calling this is only required
+    when the snapshot must be taken *earlier* than the save call (e.g. at
+    a step boundary, with the save deferred past a metrics sync)."""
+    return jax.tree.map(lambda x: np.array(jax.device_get(x)), state)
 
 
 def make_train_step(api: ModelApi, tc: Optional[TrainConfig] = None):

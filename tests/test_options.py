@@ -1,14 +1,11 @@
-"""RepairOptions/ServeOptions API + deprecated-kwarg compatibility.
+"""RepairOptions/ServeOptions API contract.
 
-The PR-8 satellite contract: every pre-PR-8 spelling (loose kwargs on
-``repair_all``/``repair_failed_nodes``/``RepairPipeline``, the fused
-``FailureEvent`` record) keeps working for one deprecation cycle, warns
-once, and is *bit-identical* to the options-object path — same telemetry,
-same recovered bytes.
+PR 8 collapsed the loose repair/serve kwargs into options objects and kept
+the old spellings for one deprecation cycle; PR 9 deleted them. The
+contract now: ``options=`` is the only way in, every legacy kwarg raises
+``TypeError`` like any other unknown keyword, and the unified event schema
+(``repro.ftx.events``) is the only failure-record vocabulary.
 """
-import dataclasses
-import warnings
-
 import numpy as np
 import pytest
 
@@ -18,8 +15,6 @@ from repro.ftx.events import (DataLossEvent, DiskFailEvent, NodeFailEvent,
                               RackFailEvent, RepairDoneEvent, ScrubEvent,
                               SectorErrorEvent, event_order, from_doc,
                               sort_events, to_doc)
-from repro.ftx.failures import FailureEvent
-from repro.ftx.options import resolve_options
 from repro.ftx.pipeline import RepairPipeline
 
 
@@ -37,109 +32,50 @@ def _twin(tmp_path, name, **cfg_over):
     return store, data
 
 
-# --------------------------------------------------------- resolve_options
+# ------------------------------------------------- legacy kwargs are gone
 
-def test_resolve_options_merges_and_warns():
-    with pytest.warns(DeprecationWarning, match="window.*deprecated"):
-        o = resolve_options(None, {"window": 3}, RepairOptions, "x")
-    assert o.window == 3 and o.batched is True
-    # legacy kwargs win over fields of a passed options object
-    with pytest.warns(DeprecationWarning):
-        o = resolve_options(RepairOptions(window=9, schedule="locality"),
-                            {"window": 2}, RepairOptions, "x")
-    assert o.window == 2 and o.schedule == "locality"
-    # no legacy kwargs: options object passes through untouched, no warning
-    with warnings.catch_warnings():
-        warnings.simplefilter("error")
-        same = RepairOptions(pipeline=True)
-        assert resolve_options(same, {}, RepairOptions, "x") is same
-        assert resolve_options(None, {}, RepairOptions, "x") == \
-            RepairOptions()
+def test_repair_all_rejects_legacy_kwargs(tmp_path):
+    store, _ = _twin(tmp_path, "legacy")
+    for kw in ({"pipeline": True}, {"window": 2}, {"batched": False},
+               {"schedule": "none"}, {"mesh_rules": None},
+               {"pipeline_hook": lambda s, i: None}, {"placement": None},
+               {"batch_size": 4}):
+        with pytest.raises(TypeError):
+            store.repair_all(**kw)
 
 
-def test_resolve_options_unknown_kwarg_raises():
-    with pytest.raises(TypeError, match="repair_all.*bogus"):
-        resolve_options(None, {"bogus": 1}, RepairOptions,
-                        "StripeStore.repair_all")
+def test_repair_failed_nodes_rejects_legacy_kwargs(tmp_path):
+    store, _ = _twin(tmp_path, "fleet")
+    victim = store.stripes[0].node_of_block[0]
+    for kw in ({"pipeline": True}, {"window": 2}, {"schedule": "none"}):
+        with pytest.raises(TypeError):
+            repair_failed_nodes(store, [victim], **kw)
 
 
-# ------------------------------------------- repair_all legacy == options
-
-def test_repair_all_legacy_bit_identical_to_options(tmp_path):
-    results = {}
-    for mode in ("options", "legacy"):
-        store, data = _twin(tmp_path, mode, pipeline_window=2)
-        victim = store.stripes[0].node_of_block[0]
-        store.fail_node(victim)
-        if mode == "options":
-            with warnings.catch_warnings():
-                warnings.simplefilter("error", DeprecationWarning)
-                tele = store.repair_all(
-                    options=RepairOptions(pipeline=True, window=2))
-        else:
-            with pytest.warns(DeprecationWarning,
-                              match="repair_all.*pipeline.*window"):
-                tele = store.repair_all(pipeline=True, window=2)
-        store.revive_node(victim)
-        results[mode] = (tele, {k: store.get(k) for k in data})
-        for k, v in data.items():
-            assert (store.get(k) == v).all()
-    opt_tele, leg_tele = results["options"][0], results["legacy"][0]
-    assert set(opt_tele) == set(leg_tele)
-    for key in opt_tele:
-        if "seconds" in key and key != "sim_seconds":
-            continue                      # wall-clock: machine noise
-        if key == "sim_seconds":          # modeled time: float-sum order
-            assert leg_tele[key] == pytest.approx(opt_tele[key])
-        else:                             # counters: exact
-            assert leg_tele[key] == opt_tele[key], key
-    for k in results["options"][1]:
-        assert (results["options"][1][k] == results["legacy"][1][k]).all()
+def test_repair_pipeline_rejects_legacy_hook_kwarg(tmp_path):
+    store, _ = _twin(tmp_path, "hook")
+    with pytest.raises(TypeError):
+        RepairPipeline(store, hook=lambda stage, i: None)
+    with pytest.raises(TypeError):
+        RepairPipeline(store, window=2)
 
 
-def test_repair_all_unknown_kwarg(tmp_path):
-    store, _ = _twin(tmp_path, "u")
-    with pytest.raises(TypeError, match="batch_size"):
-        store.repair_all(batch_size=4)
+def test_resolve_options_helper_deleted():
+    import repro.ftx.options as options_mod
+    assert not hasattr(options_mod, "resolve_options")
 
 
-def test_repair_failed_nodes_legacy_matches_options(tmp_path):
-    teles = {}
-    for mode in ("options", "legacy"):
-        store, data = _twin(tmp_path, f"f{mode}")
-        victim = store.stripes[0].node_of_block[1]
-        if mode == "options":
-            rep = repair_failed_nodes(store, [victim],
-                                      options=RepairOptions(schedule="none"))
-        else:
-            with pytest.warns(DeprecationWarning):
-                rep = repair_failed_nodes(store, [victim], schedule="none")
-        teles[mode] = rep
-        for k, v in data.items():
-            assert (store.get(k) == v).all()
-    assert teles["options"].blocks_read == teles["legacy"].blocks_read
-    assert teles["options"].stripes_repaired == \
-        teles["legacy"].stripes_repaired
-
-
-def test_repair_pipeline_legacy_hook_kwarg(tmp_path):
-    store, data = _twin(tmp_path, "hook", pipeline_window=2)
+def test_options_path_repairs(tmp_path):
+    """The options spelling (the only one left) repairs bit-exactly."""
+    store, data = _twin(tmp_path, "opts", pipeline_window=2)
     victim = store.stripes[0].node_of_block[0]
     store.fail_node(victim)
-    stages = []
-    with pytest.warns(DeprecationWarning, match="pipeline_hook"):
-        pipe = RepairPipeline(store, hook=lambda stage, i:
-                              stages.append(stage))
-    affected = {}
-    for sid in store.stripes:
-        down = store._down_blocks(sid)
-        if down:
-            affected.setdefault(down, []).append(sid)
-    work = [(sids, down, store.engine.planner.multi_plan(down))
-            for down, sids in affected.items()]
-    pipe.run(work)
+    hook_stages = []
+    tele = store.repair_all(options=RepairOptions(
+        pipeline=True, window=2,
+        pipeline_hook=lambda stage, i: hook_stages.append(stage)))
     store.revive_node(victim)
-    assert stages  # the translated hook actually fired
+    assert tele["blocks_read"] > 0 and hook_stages
     for k, v in data.items():
         assert (store.get(k) == v).all()
 
@@ -184,24 +120,20 @@ def test_serve_options_cache_opt_out_counts(tmp_path):
     assert store.telemetry.cache_hits == before_hits
 
 
-# --------------------------------------------------- FailureEvent shim
+# ------------------------------------------------- FailureEvent shim gone
 
-def test_failure_event_shim_is_node_fail_event():
-    with pytest.warns(DeprecationWarning, match="FailureEvent"):
-        ev = FailureEvent(t=3.0, node=2, repaired_at=4.5, blocks_read=12,
-                          sim_seconds=5400.0, local=True)
-    assert isinstance(ev, NodeFailEvent)
-    assert ev.t == 3.0 and ev.node == 2 and ev.repaired_at == 4.5
-    assert ev.blocks_read == 12 and ev.local is True
+def test_failure_event_shim_deleted():
+    import repro.ftx.failures as failures_mod
+    assert not hasattr(failures_mod, "FailureEvent")
 
 
-def test_injector_log_has_no_deprecation_warnings(tmp_path):
+def test_injector_emits_schema_events(tmp_path):
     store, _ = _twin(tmp_path, "inj")
     inj = FailureInjector(store, mttf_hours=8.0, seed=1)
-    with warnings.catch_warnings():
-        warnings.simplefilter("error", DeprecationWarning)
-        events = inj.run(hours=20.0)
-    assert events and all(not isinstance(e, FailureEvent) for e in events)
+    events = inj.run(hours=20.0)
+    assert events
+    assert all(isinstance(e, (NodeFailEvent, RepairDoneEvent))
+               for e in events)
 
 
 def test_injector_replay_consumes_foreign_trace(tmp_path):
