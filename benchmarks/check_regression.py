@@ -130,6 +130,23 @@ def _ckpt_stripes(doc: dict) -> dict[str, float]:
     }
 
 
+def _repair_orchestration(doc: dict) -> dict[str, float]:
+    # All three floors are deterministic counts over the committed failure
+    # trace (seeded placement, counted reads/moves — no timing): the
+    # cross-window assignment's scheduled-local-read count ratio vs the
+    # per-chunk greedy, the fraction of blocks on UP nodes after the
+    # permanent-loss replay under topology destinations, and the committed
+    # rebalance move count after the one-rack expansion. Strict dominance
+    # (global > greedy > contiguous; topology > in-place) is additionally
+    # asserted inside the benchmark worker itself.
+    return {
+        "assignment_uplift_global_vs_greedy":
+            doc["assignment_uplift_global_vs_greedy"],
+        "destination_live_fraction": doc["destination_live_fraction"],
+        "rebalance_moves": doc["rebalance_moves"],
+    }
+
+
 EXTRACTORS = {
     "batched_repair": _batched_repair,
     "batched_decode": _batched_decode,
@@ -138,6 +155,7 @@ EXTRACTORS = {
     "stripe_schedule": _stripe_schedule,
     "degraded_read": _degraded_read,
     "reliability_sim": _reliability_sim,
+    "repair_orchestration": _repair_orchestration,
     "ckpt_stripes": _ckpt_stripes,
 }
 
@@ -203,6 +221,20 @@ def main(argv=None) -> int:
         old: dict = {}
         if args.baseline.exists():
             old = json.loads(args.baseline.read_text()).get("sections", {})
+        # A re-seeded section must still produce every metric its old
+        # baseline gated: a rename or a dropped field in the benchmark's
+        # JSON would otherwise silently delete the floor and the gate
+        # would never notice the metric going away.
+        dropped = [f"{s}/{m}" for s in sorted(set(current) & set(old))
+                   for m in old[s] if m not in current[s]]
+        if dropped:
+            print("error: --update-baseline would drop gated metric(s) "
+                  "missing from the new results:", file=sys.stderr)
+            for d in dropped:
+                print(f"  - {d}", file=sys.stderr)
+            print("fix the benchmark/extractor (or intentionally remove "
+                  "the metric from the baseline by hand)", file=sys.stderr)
+            return 1
         sections = {**old, **current}
         doc = {"tolerance": (args.tolerance if args.tolerance is not None
                              else DEFAULT_TOLERANCE),

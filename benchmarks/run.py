@@ -17,6 +17,8 @@ Sections (paper analogue in brackets):
   degraded_read     coalesced degraded serving vs RS decode  [PR-6 tentpole]
   batched_decode    bit-plane batched decode, backend sweep  [PR-7 tentpole]
   reliability_sim   event-driven fleet reliability simulator [PR-8 tentpole]
+  repair_orchestration  trace-replayed global assignment +
+                    destinations + rebalance                 [PR-10 tentpole]
   kernels           encode kernels vs jnp reference          [§V substrate]
   ckpt_stripes      EC-checkpoint encode/repair per arch    [framework]
   roofline          dry-run roofline table                   [deliverable g]
@@ -43,7 +45,8 @@ SECTIONS = ("repair_costs", "local_portion", "mttdl", "repair_time",
             "blocksize_sweep", "filelevel", "batched_repair",
             "sharded_repair", "pipelined_repair", "sharded_gather",
             "stripe_schedule", "degraded_read", "batched_decode",
-            "reliability_sim", "kernels", "ckpt_stripes", "roofline")
+            "reliability_sim", "repair_orchestration", "kernels",
+            "ckpt_stripes", "roofline")
 
 
 def main(argv=None) -> int:

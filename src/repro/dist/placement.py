@@ -108,6 +108,28 @@ class PlacementMap:
                    node_of=lambda sid, b: store.stripes[sid].node_of_block[b])
 
 
+def block_loads(placements, num_nodes: int) -> dict[int, int]:
+    """Resident-block count per node over per-stripe block->node lists.
+
+    Args:
+        placements: iterable of ``node_of_block`` lists (one per stripe) —
+            e.g. ``(s.node_of_block for s in store.stripes.values())``.
+        num_nodes: fleet size; every node gets an entry (0 when empty), so
+            least-loaded selection sees idle nodes too.
+
+    Returns:
+        ``{node: blocks resident}`` — the load model behind
+        rebuild-destination selection
+        (``repro.dist.topology.pick_destinations``) and the rebalancer
+        (``repro.ftx.rebalance``).
+    """
+    loads = {n: 0 for n in range(num_nodes)}
+    for nodes in placements:
+        for n in nodes:
+            loads[n] = loads.get(n, 0) + 1
+    return loads
+
+
 @dataclasses.dataclass(frozen=True)
 class ShardSlice:
     """One device shard's contiguous stripe range of an ``(S, ...)`` batch.

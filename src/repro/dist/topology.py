@@ -190,6 +190,143 @@ def _place_spread(topo: Topology, sid: int, n: int) -> list[int]:
     return [pool[int(i)] for i in sel]
 
 
+def placement_ok(policy: str, topo: Topology, nodes: list[int], *,
+                 width: Optional[int] = None) -> bool:
+    """Does a stripe's block->node list satisfy ``policy``'s invariants?
+
+    The shared legality check behind rebuild-destination selection
+    (:func:`pick_destinations`), the rebalancer's move filter
+    (``repro.ftx.rebalance``), and the post-repair property tests:
+
+    * every policy: the ``n`` nodes are distinct;
+    * ``"round_robin"``: no failure domain holds more than
+      ``ceil(n / num_domains)`` of the stripe's blocks (the one-block-
+      per-domain dispersion bound, generalized to ``n > num_domains``);
+    * ``"spread"``: the stripe touches at most ``width`` distinct domains
+      (the copyset width bound; defaults to the larger of
+      ``topo.spread_width`` and the fewest domains whose pooled nodes can
+      hold ``n`` blocks — the same widening ``_place_spread`` applies);
+    * ``"contiguous"``: no constraint beyond distinctness (arcs are a
+      write-time layout, not a durability invariant).
+    """
+    if len(set(nodes)) != len(nodes):
+        return False
+    if policy == "round_robin":
+        per: dict[int, int] = {}
+        for n in nodes:
+            d = topo.domain_of(n)
+            per[d] = per.get(d, 0) + 1
+        return max(per.values()) <= -(-len(nodes) // topo.num_domains)
+    if policy == "spread":
+        if width is None:
+            sizes = sorted((len(topo.nodes_in(d))
+                            for d in range(topo.num_domains)), reverse=True)
+            need, pooled = 0, 0
+            while pooled < len(nodes) and need < len(sizes):
+                pooled += sizes[need]
+                need += 1
+            width = max(topo.spread_width, need)
+        return len({topo.domain_of(n) for n in nodes}) <= width
+    return True
+
+
+def pick_destinations(topo: Topology, policy: str,
+                      placements: dict[int, list[int]],
+                      lost, alive,
+                      loads: Optional[dict[int, int]] = None
+                      ) -> dict[tuple[int, int], int]:
+    """Choose a surviving home for every lost block, least-loaded first.
+
+    The rebuild-destination policy (DESIGN.md §14): instead of writing a
+    rebuilt block back to its dead node's address, place it on an *alive*
+    node of the least-loaded surviving failure domain — ranked so the
+    placement policy's invariants are preserved, not just node
+    distinctness:
+
+    * ``"spread"`` prefers domains the stripe already occupies (by
+      surviving blocks or already-chosen destinations), so the copyset
+      width does not grow while any occupied domain still has capacity;
+    * ``"round_robin"`` prefers the domains holding the *fewest* of the
+      stripe's blocks, so the per-domain dispersion bound is maintained;
+    * ``"contiguous"`` ranks purely by domain load.
+
+    Within the chosen domain the least-loaded alive node not already used
+    by the stripe wins; ties break on the lower id, so the result is
+    deterministic in ``(topo, policy, placements, lost, alive, loads)``.
+    Domain load is the mean resident-block count per *alive* member node.
+    A block with no legal destination (every alive node already used by
+    its stripe) is omitted — the caller writes it back in place.
+
+    Args:
+        topo: the fleet topology.
+        policy: the store's placement policy (one of :data:`POLICIES`).
+        placements: ``sid -> node_of_block`` pre-repair snapshot for every
+            affected stripe.
+        lost: ``(sid, block)`` pairs needing a new home.
+        alive: ids of UP nodes (destination candidates).
+        loads: resident-block count per node
+            (``repro.dist.placement.block_loads``); defaults to loads over
+            ``placements`` only. Not mutated; assignment updates are
+            tracked on a copy so later picks see earlier ones.
+
+    Returns:
+        ``{(sid, block): node}`` for every block that found a legal
+        surviving destination.
+    """
+    from .placement import block_loads
+
+    alive = set(alive)
+    lost = sorted(set(lost))
+    if loads is None:
+        loads = block_loads(placements.values(), topo.num_nodes)
+    loads = dict(loads)
+    lost_by_sid: dict[int, set[int]] = {}
+    for sid, b in lost:
+        lost_by_sid.setdefault(sid, set()).add(b)
+    members = {d: [n for n in topo.nodes_in(d) if n in alive]
+               for d in range(topo.num_domains)}
+
+    out: dict[tuple[int, int], int] = {}
+    for sid, block in lost:
+        nodes = placements[sid]
+        # Nodes this stripe occupies: survivors of non-lost blocks plus
+        # destinations already chosen for sibling lost blocks.
+        used = {n for i, n in enumerate(nodes)
+                if i not in lost_by_sid[sid]}
+        used |= {out[(sid, b)] for b in lost_by_sid[sid]
+                 if (sid, b) in out}
+        occupancy: dict[int, int] = {}
+        for n in used:
+            d = topo.domain_of(n)
+            occupancy[d] = occupancy.get(d, 0) + 1
+
+        def usable(d: int) -> list[int]:
+            return [n for n in members[d] if n not in used]
+
+        def load_of(d: int) -> float:
+            pool = members[d]
+            return (sum(loads.get(n, 0) for n in pool) / len(pool)
+                    if pool else float("inf"))
+
+        cands = [d for d in range(topo.num_domains) if usable(d)]
+        if not cands:
+            continue                        # no legal home: stay in place
+        def key(d: int) -> tuple:
+            if policy == "round_robin":
+                return (occupancy.get(d, 0), load_of(d), d)
+            if policy == "spread":
+                return (occupancy.get(d, 0) == 0, load_of(d), d)
+            return (load_of(d), d)
+
+        dom = min(cands, key=key)
+        node = min(usable(dom), key=lambda n: (loads.get(n, 0), n))
+        out[(sid, block)] = node
+        loads[node] = loads.get(node, 0) + 1
+        old = nodes[block]
+        loads[old] = max(0, loads.get(old, 0) - 1)
+    return out
+
+
 def placement_from_topology(store, topo: Topology,
                             remote_multiplier: Optional[float] = None
                             ) -> PlacementMap:

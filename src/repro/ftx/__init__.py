@@ -18,3 +18,5 @@ from .fleet import (DegradedReadReport, FleetRepairReport,  # noqa: F401
                     read_report, repair_failed_nodes)
 from .pipeline import (EncodePipeline, PipelineResult,  # noqa: F401
                        RepairPipeline, run_double_buffered)
+from .rebalance import (Move, RebalanceReport, Rebalancer,  # noqa: F401
+                        plan_moves, rebalance)

@@ -163,3 +163,32 @@ def from_doc(doc: dict) -> FleetEvent:
 def sort_events(events: Iterable[FleetEvent]) -> list[FleetEvent]:
     """Events in canonical order (stable under :func:`event_order`)."""
     return sorted(events, key=event_order)
+
+
+def dump_trace(events: Iterable[FleetEvent], path) -> None:
+    """Write an event trace as a JSON file, canonically ordered.
+
+    The on-disk shape is ``{"events": [to_doc(e), ...]}`` with sorted
+    dict keys and a fixed indent — byte-stable for a given event list, so
+    committed trace fixtures diff cleanly and a dump->load->dump cycle is
+    the identity (the golden-file property the replay tests pin).
+    """
+    import json
+    from pathlib import Path
+
+    docs = [to_doc(e) for e in sort_events(events)]
+    Path(path).write_text(
+        json.dumps({"events": docs}, indent=2, sort_keys=True) + "\n")
+
+
+def load_trace(path) -> list[FleetEvent]:
+    """Read a :func:`dump_trace` file back into canonically ordered events.
+
+    Accepts the ``{"events": [...]}`` envelope or a bare JSON list of
+    event docs (hand-written fixtures)."""
+    import json
+    from pathlib import Path
+
+    doc = json.loads(Path(path).read_text())
+    rows = doc["events"] if isinstance(doc, dict) else doc
+    return sort_events(from_doc(r) for r in rows)

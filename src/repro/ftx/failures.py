@@ -21,8 +21,8 @@ from typing import Iterable, Optional
 
 import numpy as np
 
-from .events import (FleetEvent, NodeFailEvent, RepairDoneEvent,
-                     sort_events)
+from .events import (FleetEvent, NodeFailEvent, RackFailEvent,
+                     RepairDoneEvent, sort_events)
 from .options import RepairOptions
 from .stripestore import StoreConfig, StripeStore
 
@@ -113,6 +113,108 @@ class FailureInjector:
     def repairs(self) -> list[RepairDoneEvent]:
         """Just the repair-done events of the accumulated log."""
         return [e for e in self.events if isinstance(e, RepairDoneEvent)]
+
+
+def replay_trace(store: StripeStore, events: Iterable[FleetEvent], *,
+                 options: Optional[RepairOptions] = None,
+                 revive: bool = True,
+                 rebalance_after: bool = False) -> dict:
+    """Replay a failure trace with *correlated-arrival* repair batching.
+
+    The orchestration entry point (DESIGN.md §14): where
+    :meth:`FailureInjector.replay` repairs one node at a time,
+    this groups every failure sharing a timestamp — the correlated
+    rack/burst arrivals the trace fixtures encode — fails the whole batch,
+    and runs **one** ``repair_all`` over it, which is exactly when the
+    cross-window assignment (``options.schedule="global"``) and
+    topology-aware destinations (``options.destinations="topology"``)
+    have room to win. ``RackFailEvent`` rows expand to the rack's nodes
+    through the store topology; nodes already DOWN are skipped.
+
+    Args:
+        store: the store to drive; mutated in place.
+        events: any :mod:`repro.ftx.events` trace (only failure events are
+            consumed; repair-done rows are re-earned here).
+        options: forwarded to every ``repair_all`` batch.
+        revive: bring failed nodes back UP after their batch repairs
+            (fresh replacements). ``False`` leaves them DOWN — the
+            permanent-loss mode destination selection exists for.
+        rebalance_after: run one ``repro.ftx.rebalance`` pass after the
+            last batch and report it.
+
+    Returns:
+        ``{"batches": [...], "events": [...], "totals": {...},
+        "rebalance": ...}`` — one row per correlated batch carrying its
+        time, failed nodes, and the repair telemetry deltas the
+        orchestration benchmark gates (local/total reads, scheduled vs
+        contiguous locality, blocks relocated); totals aggregate them.
+    """
+    options = options or RepairOptions()
+    batches: dict[float, list[int]] = {}
+    for ev in sort_events(events):
+        nodes: list[int] = []
+        if isinstance(ev, NodeFailEvent):
+            nodes = [ev.node]
+        elif isinstance(ev, RackFailEvent):
+            nodes = store.topology.nodes_in(ev.rack)
+        for n in nodes:
+            if not 0 <= n < store.num_nodes:
+                raise ValueError(f"trace node {n} outside store "
+                                 f"with {store.num_nodes} nodes")
+            batches.setdefault(ev.t, []).append(n)
+
+    rows: list[dict] = []
+    out_events: list[FleetEvent] = []
+    for t in sorted(batches):
+        failed = sorted(set(n for n in batches[t]
+                            if store.nodes[n].name == "UP"))
+        if not failed:
+            continue
+        for n in failed:
+            store.fail_node(n)
+            out_events.append(NodeFailEvent(t=t, node=n))
+        before = store.telemetry.copy()
+        tele = store.repair_all(options=options)
+        diff = store.telemetry
+        row = {"t": t, "nodes": failed,
+               "blocks_read": tele["blocks_read"],
+               "sim_seconds": tele["sim_seconds"],
+               "local_reads": diff.local_reads - before.local_reads,
+               "remote_reads": diff.remote_reads - before.remote_reads,
+               "scheduled_local": tele.get("scheduled_local_reads", 0),
+               "contiguous_local": tele.get("contiguous_local_reads", 0),
+               "schedule_total": tele.get("schedule_total_reads", 0),
+               "blocks_relocated": tele.get("blocks_relocated", 0),
+               "repairs_local": tele["repairs_local"],
+               "repairs_global": tele["repairs_global"]}
+        rows.append(row)
+        done_t = t + tele["sim_seconds"] / 3600.0
+        for n in failed:
+            if revive:
+                store.revive_node(n)
+            out_events.append(RepairDoneEvent(
+                t=done_t, unit=n, kind="node", started_at=t,
+                blocks_read=tele["blocks_read"],
+                sim_seconds=tele["sim_seconds"],
+                local=tele["repairs_global"] == 0))
+
+    totals = {k: sum(r[k] for r in rows) for k in
+              ("blocks_read", "local_reads", "remote_reads",
+               "scheduled_local", "contiguous_local", "schedule_total",
+               "blocks_relocated", "repairs_local", "repairs_global")}
+    totals["sim_seconds"] = sum(r["sim_seconds"] for r in rows)
+    result = {"batches": rows, "events": sort_events(out_events),
+              "totals": totals, "rebalance": None}
+    if rebalance_after:
+        from .rebalance import rebalance
+
+        rep = rebalance(store)
+        result["rebalance"] = {
+            "planned": rep.planned, "moved": rep.moved,
+            "windows": rep.windows, "bytes_moved": rep.bytes_moved,
+            "imbalance_before": rep.imbalance_before,
+            "imbalance_after": rep.imbalance_after}
+    return result
 
 
 def restripe(store: StripeStore, new_cfg: StoreConfig, root) -> tuple[StripeStore, dict]:

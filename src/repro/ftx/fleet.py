@@ -130,6 +130,14 @@ class FleetRepairReport:
     schedule: str = "none"
     scheduled_local_read_fraction: float = 1.0
     contiguous_local_read_fraction: float = 1.0
+    # Rebuild-destination selection (repro.dist.topology.pick_destinations):
+    # which write-back policy ran ("in_place" or "topology"), how many
+    # rebuilt blocks were re-homed onto surviving nodes, and what fraction
+    # of those landed in a domain the stripe already occupied (copyset
+    # preservation — the spread policy's width bound, observable).
+    destinations: str = "in_place"
+    blocks_relocated: int = 0
+    destination_copyset_fraction: float = 1.0
     # The kernel formulation the repair launches actually executed
     # (repro.kernels.ops.effective_backend): equals the store's configured
     # backend except the one documented substitution — an interpreted "gf"
@@ -330,6 +338,10 @@ def repair_failed_nodes(store, nodes: Iterable[int], *,
             "scheduled_local_read_fraction", 1.0),
         contiguous_local_read_fraction=tele.get(
             "contiguous_local_read_fraction", 1.0),
+        destinations=tele.get("destinations", "in_place"),
+        blocks_relocated=tele.get("blocks_relocated", 0),
+        destination_copyset_fraction=tele.get(
+            "destination_copyset_fraction", 1.0),
         effective_backend=tele.get("effective_backend",
                                    store.cfg.backend),
     )

@@ -40,7 +40,10 @@ class RepairOptions:
     window: Optional[int] = None         # stripes per window/launch chunk
     pipeline_hook: Optional[Callable[[str, int], None]] = None
     placement: Any = None                # PlacementMap for the sharded gather
-    schedule: Optional[str] = None       # "none" | "locality"
+    schedule: Optional[str] = None       # "none" | "locality" | "global"
+    destinations: Optional[str] = None   # rebuild write-back placement:
+    #                                      "in_place" | "topology" (None ->
+    #                                      cfg.rebuild_destinations)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -181,6 +181,7 @@ class RepairPipeline:
     """
 
     def __init__(self, store, *, spare_of: Optional[dict[int, int]] = None,
+                 dest_of: Optional[dict[tuple[int, int], int]] = None,
                  threads: Optional[int] = None,
                  byte_budget: Optional[int] = None,
                  options=None):
@@ -189,6 +190,10 @@ class RepairPipeline:
         o = options if options is not None else RepairOptions()
         self.store = store
         self.spare_of = spare_of
+        # Per-block rebuild destinations ((sid, block) -> surviving node),
+        # pre-computed by repair_all from the pre-repair placement snapshot;
+        # applied at write-back (re-planned sub-windows included).
+        self.dest_of = dest_of
         self.mesh_rules = o.mesh_rules
         self.placement = o.placement
         # Stripe->device-shard assignment per window ("locality" permutes
@@ -211,7 +216,7 @@ class RepairPipeline:
     # ------------------------------------------------------------- windows
     def _windows(self, work: Sequence[tuple[list[int], frozenset[int], object]],
                  res: PipelineResult) -> list[RepairWindow]:
-        from repro.dist.schedule import schedule_chunk
+        from repro.dist.schedule import schedule_group
 
         from .stripestore import launch_step
 
@@ -222,10 +227,12 @@ class RepairPipeline:
                                **({} if self.byte_budget is None
                                   else {"byte_budget": self.byte_budget}))
             step = align_stripe_window(step, self.mesh_rules)
-            for lo in range(0, len(sids), step):
-                cs = schedule_chunk(sids[lo:lo + step], compiled.reads,
-                                    self.placement, self.mesh_rules,
-                                    self.schedule)
+            # "global" assigns the whole pattern group's stripes across all
+            # its windows in one exact solve (stripes may migrate between
+            # windows); "locality"/"none" reduce to the per-chunk schedule.
+            for cs in schedule_group(sids, compiled.reads, self.placement,
+                                     self.mesh_rules, step=step,
+                                     mode=self.schedule):
                 res.scheduled_local += cs.scheduled_local
                 res.contiguous_local += cs.contiguous_local
                 res.schedule_total += cs.total_reads
@@ -304,7 +311,7 @@ class RepairPipeline:
                    res: PipelineResult) -> None:
         t0 = time.perf_counter()
         self.store._finish_repair(list(win.sids), win.down, win.compiled.meta,
-                                  rebuilt, self.spare_of)
+                                  rebuilt, self.spare_of, self.dest_of)
         t1 = time.perf_counter()
         self._span(res, "write", win.index, t0, t1)
 

@@ -93,14 +93,28 @@ class StoreConfig:
     #                                    contiguous arcs (seed behavior),
     #                                    round_robin across domains, or
     #                                    copyset-style spread
-    stripe_schedule: str = "locality"  # stripe->device-shard assignment for
+    stripe_schedule: str = "global"    # stripe->device-shard assignment for
     #                                    sharded repair launches
-    #                                    (repro.dist.schedule): "locality"
-    #                                    permutes each chunk onto the shards
+    #                                    (repro.dist.schedule): "global"
+    #                                    solves one exact min-cost
+    #                                    assignment across all windows of a
+    #                                    pattern group (never worse than
+    #                                    "locality"); "locality" permutes
+    #                                    each chunk greedily onto the shards
     #                                    owning most of its surviving blocks
     #                                    (never predicted worse than
     #                                    contiguous); "none" keeps the
     #                                    contiguous default
+    rebuild_destinations: str = "in_place"  # where repair_all persists
+    #                                    rebuilt blocks: "in_place" writes
+    #                                    back to the failed block's original
+    #                                    node address (seed behavior);
+    #                                    "topology" re-homes each rebuilt
+    #                                    block on the least-loaded surviving
+    #                                    domain while preserving the
+    #                                    placement policy's invariants
+    #                                    (repro.dist.topology.
+    #                                    pick_destinations)
     read_cache_blocks: int = 64        # hot-block reconstruction cache: max
     #                                    reconstructed blocks kept for the
     #                                    degraded serving path (LRU;
@@ -148,6 +162,10 @@ class Telemetry:
     local_reads: int = 0
     remote_reads: int = 0
     gather_bytes_per_shard: dict = dataclasses.field(default_factory=dict)
+    # Rebuild-destination accounting: blocks whose repair write-back landed
+    # on a topology-chosen surviving node instead of the failed block's
+    # original address (repro.dist.topology.pick_destinations).
+    blocks_relocated: int = 0
     # Degraded-read serving path (read/read_range): requests served straight
     # from live blocks vs. reconstructed inline; how many of the degraded
     # ones piggybacked on another request's in-flight decode (coalescing) or
@@ -178,6 +196,7 @@ class Telemetry:
         self.read_seconds = self.compute_seconds = self.write_seconds = 0.0
         self.local_reads = self.remote_reads = 0
         self.gather_bytes_per_shard = {}
+        self.blocks_relocated = 0
         self.direct_reads = self.degraded_reads = self.coalesced_reads = 0
         self.serve_decode_launches = 0
         self.serve_local_decodes = self.serve_global_decodes = 0
@@ -213,10 +232,14 @@ class StripeStore:
             raise ValueError(f"unknown placement_policy "
                              f"{cfg.placement_policy!r} "
                              f"(choose from {', '.join(POLICIES)})")
-        if cfg.stripe_schedule not in ("none", "locality"):
+        if cfg.stripe_schedule not in ("none", "locality", "global"):
             raise ValueError(f"unknown stripe_schedule "
                              f"{cfg.stripe_schedule!r} "
-                             f"(choose from none, locality)")
+                             f"(choose from none, locality, global)")
+        if cfg.rebuild_destinations not in ("in_place", "topology"):
+            raise ValueError(f"unknown rebuild_destinations "
+                             f"{cfg.rebuild_destinations!r} "
+                             f"(choose from in_place, topology)")
         self.scheme = make_scheme(cfg.scheme, cfg.k, cfg.r, cfg.p)
         self.codec = StripeCodec(self.scheme, backend=cfg.backend)
         # Batched executor sharing the codec's plan cache: fleet repair
@@ -725,6 +748,39 @@ class StripeStore:
     def revive_node(self, node: int) -> None:
         self.nodes[node] = NodeState.UP
 
+    def expand(self, topology) -> list[int]:
+        """Grow the fleet to ``topology`` (same or more nodes) in place.
+
+        The fleet-expansion half of the rebalancing story (DESIGN.md §14):
+        new nodes join UP and empty, existing node ids keep their state,
+        placement, and simulated latency (the latency model re-draws from
+        the same seed, so the original prefix is bit-identical), and the
+        new topology drives all future placement, gather sharding, and
+        destination selection. Existing stripes are *not* moved — run the
+        rebalancer (``repro.ftx.rebalance``) to smooth load onto the new
+        capacity.
+
+        Returns the newly added node ids (empty when only the domain
+        geometry changed).
+        """
+        from repro.dist.topology import placement_from_topology
+
+        if topology.num_nodes < self.num_nodes:
+            raise ValueError(f"cannot shrink: store has {self.num_nodes} "
+                             f"nodes, topology has {topology.num_nodes}")
+        added = list(range(self.num_nodes, topology.num_nodes))
+        self.num_nodes = topology.num_nodes
+        self.topology = topology
+        self._topology_explicit = True
+        lat = np.random.default_rng(self.cfg.seed).gamma(
+            2.0, 5.0, self.num_nodes)
+        for i in added:
+            self.nodes[i] = NodeState.UP
+            self.latency_ms[i] = float(lat[i])
+            (self.root / f"node{i}").mkdir(parents=True, exist_ok=True)
+        self.placement = placement_from_topology(self, topology)
+        return added
+
     def repair_all(self, spare_of: Optional[dict[int, int]] = None, *,
                    options: Optional["RepairOptions"] = None) -> dict:
         """Rebuild every block resident on DOWN nodes onto spares (or back in
@@ -771,28 +827,48 @@ class StripeStore:
 
         ``schedule`` (default ``cfg.stripe_schedule``) picks the stripe ->
         device-shard assignment of each batched chunk
-        (``repro.dist.schedule``): ``"locality"`` permutes the chunk so
-        every stripe lands on the device slice whose serving host shard
-        owns the most of its surviving blocks (greedy cost-model argmax,
-        kept only when it beats the contiguous assignment — the predicted
-        local-read fraction never drops); ``"none"`` keeps the contiguous
-        default. Bit-identical either way: write-back is keyed by stripe
-        id, so a permutation changes which shard reads which bytes, never
-        the bytes. The telemetry reports both predictions
+        (``repro.dist.schedule``): ``"global"`` solves one exact min-cost
+        assignment across *all* windows of each pattern group (stripes may
+        migrate between windows; never predicted worse than the greedy
+        per-chunk result); ``"locality"`` permutes each chunk so every
+        stripe lands on the device slice whose serving host shard owns the
+        most of its surviving blocks (greedy cost-model argmax, kept only
+        when it beats the contiguous assignment — the predicted local-read
+        fraction never drops); ``"none"`` keeps the contiguous default.
+        Bit-identical every way: write-back is keyed by stripe id, so a
+        permutation changes which shard reads which bytes, never the
+        bytes. The telemetry reports both predictions
         (``scheduled_local_read_fraction`` vs
         ``contiguous_local_read_fraction``) so the scheduler's uplift is
         observable in every repair.
+
+        ``destinations`` (default ``cfg.rebuild_destinations``) picks
+        where rebuilt blocks are persisted: ``"in_place"`` writes each
+        block back to its original (failed) node address — the seed
+        behavior, which leaves the rebuilt copy on a DOWN node until that
+        node revives; ``"topology"`` re-homes every lost block onto the
+        least-loaded *surviving* failure domain via
+        ``repro.dist.topology.pick_destinations``, preserving the
+        placement policy's invariants (copyset width for ``spread``,
+        per-domain dispersion for ``round_robin``) so follow-up repairs
+        stay local. ``spare_of`` (node-level spares) takes precedence for
+        blocks whose node it maps. The telemetry reports
+        ``blocks_relocated`` and ``destination_copyset_fraction`` (how
+        many re-homed blocks landed in a domain the stripe already
+        occupied).
         """
         from repro.dist.placement import PlacementMap
-        from repro.dist.schedule import schedule_chunk
+        from repro.dist.schedule import schedule_group
         from repro.dist.sharding import current_rules
         from repro.dist.stripes import stripe_axis_span
+        from repro.dist.topology import pick_destinations
 
         o = options if options is not None else RepairOptions()
         batched, mesh_rules = o.batched, o.mesh_rules
         pipeline, window = o.pipeline, o.window
         pipeline_hook, placement, schedule = (o.pipeline_hook, o.placement,
                                               o.schedule)
+        destinations = o.destinations
         mr = mesh_rules if mesh_rules is not None else current_rules()
         if placement is None:
             placement = self.placement
@@ -801,9 +877,15 @@ class StripeStore:
                 self, num_shards=max(1, stripe_axis_span(mr)))
         if schedule is None:
             schedule = self.cfg.stripe_schedule
-        if schedule not in ("none", "locality"):
+        if schedule not in ("none", "locality", "global"):
             raise ValueError(f"unknown stripe schedule {schedule!r} "
-                             f"(choose from none, locality)")
+                             f"(choose from none, locality, global)")
+        if destinations is None:
+            destinations = self.cfg.rebuild_destinations
+        if destinations not in ("in_place", "topology"):
+            raise ValueError(f"unknown rebuild destinations "
+                             f"{destinations!r} "
+                             f"(choose from in_place, topology)")
         use_pipeline = batched and (pipeline if pipeline is not None
                                     else self.cfg.pipeline_window > 0)
         before = self.telemetry.copy()
@@ -813,6 +895,33 @@ class StripeStore:
             down = self._down_blocks(sid)
             if down:
                 affected.setdefault(down, []).append(sid)
+        # Topology-aware rebuild destinations: decide, up front and from the
+        # pre-repair placement snapshot, a surviving home for every lost
+        # block (repro.dist.topology.pick_destinations). Applied at
+        # write-back; deterministic in (topology, placements, alive set).
+        dest_of: Optional[dict[tuple[int, int], int]] = None
+        dest_copyset = dest_total = 0
+        if destinations == "topology" and affected:
+            from repro.dist.placement import block_loads
+
+            alive = {n for n, s in self.nodes.items() if s is NodeState.UP}
+            lost = [(sid, b) for down, g_sids in affected.items()
+                    for sid in g_sids for b in down]
+            placements = {sid: list(self.stripes[sid].node_of_block)
+                          for _, g_sids in affected.items() for sid in g_sids}
+            loads = block_loads((s.node_of_block
+                                 for s in self.stripes.values()),
+                                self.num_nodes)
+            dest_of = pick_destinations(
+                self.topology, self.cfg.placement_policy, placements,
+                lost, alive, loads=loads)
+            dest_total = len(dest_of)
+            for (sid, b), node in dest_of.items():
+                live = {self.topology.domain_of(n)
+                        for i, n in enumerate(placements[sid])
+                        if (sid, i) not in dest_of}
+                if self.topology.domain_of(node) in live:
+                    dest_copyset += 1
         launches = 0
         devices = 1
         device_launches = 0
@@ -836,7 +945,7 @@ class StripeStore:
                     rebuilt, _ = self._execute_multi(sid, plan, down, None)
                     self._finish_repair([sid], down, plan,
                                         {b: v[None] for b, v in rebuilt.items()},
-                                        spare_of)
+                                        spare_of, dest_of)
                     launches += 1
                     device_launches += 1
                 continue
@@ -851,7 +960,8 @@ class StripeStore:
             from .pipeline import RepairPipeline
 
             res = RepairPipeline(
-                self, spare_of=spare_of, byte_budget=_BATCH_BYTE_BUDGET,
+                self, spare_of=spare_of, dest_of=dest_of,
+                byte_budget=_BATCH_BYTE_BUDGET,
                 options=RepairOptions(
                     mesh_rules=mr, window=window,
                     pipeline_hook=pipeline_hook, placement=placement,
@@ -873,17 +983,19 @@ class StripeStore:
             for sids, down, compiled in work:
                 # Chunk by stripe count AND gathered-stack bytes, so wide
                 # read sets at large block sizes stay within a bounded
-                # host-memory transient.
+                # host-memory transient. schedule_group assigns the whole
+                # pattern group's stripes to windows x device slices at
+                # once ("global" solves the cross-window transportation
+                # problem; "locality"/"none" reduce to per-chunk).
                 step = launch_step(self.cfg, len(compiled.reads), window)
-                for lo in range(0, len(sids), step):
-                    cs = schedule_chunk(sids[lo:lo + step], compiled.reads,
-                                        placement, mr, schedule)
+                for cs in schedule_group(sids, compiled.reads, placement,
+                                         mr, step=step, mode=schedule):
                     sched_local += cs.scheduled_local
                     contig_local += cs.contiguous_local
                     sched_total += cs.total_reads
                     span = self._repair_group(list(cs.sids), down,
                                               compiled, spare_of, mr,
-                                              placement)
+                                              placement, dest_of)
                     launches += 1
                     devices = max(devices, span)
                     device_launches += span
@@ -933,6 +1045,10 @@ class StripeStore:
             "remote_reads": t.remote_reads - before.remote_reads,
             "gather_bytes_per_shard": gather_shards,
             "schedule": schedule if batched else "none",
+            "destinations": destinations,
+            "blocks_relocated": t.blocks_relocated - before.blocks_relocated,
+            "destination_copyset_fraction":
+                dest_copyset / dest_total if dest_total else 1.0,
             "scheduled_local_reads": sched_local,
             "contiguous_local_reads": contig_local,
             "schedule_total_reads": sched_total,
@@ -971,7 +1087,9 @@ class StripeStore:
 
     def _repair_group(self, sids: list[int], down: frozenset[int],
                       compiled, spare_of: Optional[dict[int, int]],
-                      mesh_rules=None, placement=None) -> int:
+                      mesh_rules=None, placement=None,
+                      dest_of: Optional[dict[tuple[int, int], int]] = None
+                      ) -> int:
         """Batched repair of stripes sharing one failure pattern: per-shard
         gathers land each device's slice of the (S, |reads|, B) input
         straight on its shard (one host buffer per shard, no full-batch
@@ -986,7 +1104,8 @@ class StripeStore:
         out = np.asarray(self.engine.execute(compiled, stacked, mesh_rules))
         rebuilt = {b: out[:, t, :] for t, b in enumerate(compiled.targets)}
         t2 = time.perf_counter()
-        self._finish_repair(sids, down, compiled.meta, rebuilt, spare_of)
+        self._finish_repair(sids, down, compiled.meta, rebuilt, spare_of,
+                            dest_of)
         t3 = time.perf_counter()
         with self._tele_lock:
             self.telemetry.read_seconds += t1 - t0
@@ -996,24 +1115,33 @@ class StripeStore:
 
     def _finish_repair(self, sids: list[int], down: frozenset[int], plan,
                        rebuilt: dict[int, np.ndarray],
-                       spare_of: Optional[dict[int, int]]) -> None:
+                       spare_of: Optional[dict[int, int]],
+                       dest_of: Optional[dict[tuple[int, int], int]] = None
+                       ) -> None:
         """Account telemetry and persist rebuilt (S, B) blocks per stripe.
 
-        Thread-safe against concurrent prefetch reads: the pipeline calls
-        this from its writer thread while reader threads bump the read
-        counters."""
-        with self._tele_lock:
-            if plan.all_local:
-                self.telemetry.repairs_local += len(sids)
-            else:
-                self.telemetry.repairs_global += len(sids)
+        ``spare_of`` (node-level spares) takes precedence over ``dest_of``
+        (per-block topology destinations); blocks neither maps write back
+        in place. Thread-safe against concurrent prefetch reads: the
+        pipeline calls this from its writer thread while reader threads
+        bump the read counters."""
+        relocated = 0
         for i, sid in enumerate(sids):
             st = self.stripes[sid]
             for b, data in rebuilt.items():
                 target_node = st.node_of_block[b]
                 if spare_of and target_node in spare_of:
                     st.node_of_block[b] = spare_of[target_node]
+                elif dest_of and (sid, b) in dest_of:
+                    st.node_of_block[b] = dest_of[(sid, b)]
+                    relocated += 1
                 self._write_block(sid, b, data[i])
+        with self._tele_lock:
+            if plan.all_local:
+                self.telemetry.repairs_local += len(sids)
+            else:
+                self.telemetry.repairs_global += len(sids)
+            self.telemetry.blocks_relocated += relocated
 
     def _execute_multi(self, sid: int, plan, down: frozenset[int],
                        rng: Optional[tuple[int, int]]):

@@ -33,6 +33,67 @@ from repro.sim import (SimParams, UnitHierarchy, calibrated, simulate,
 from repro.sim.units import COST_MODELS, MODELS
 
 
+def _replay(args) -> int:
+    """``--replay``: drive a real store through a committed failure trace.
+
+    Builds a scratch :class:`~repro.ftx.StripeStore` under the requested
+    geometry, fills it with seeded deterministic objects, and replays the
+    trace through :func:`repro.ftx.failures.replay_trace` — correlated
+    same-timestamp failures repair as one batch, under the requested
+    orchestration knobs. The printed JSON carries only deterministic
+    fields (simulated time, block/read counts, relocations, rebalance
+    moves), so two runs over the same trace are byte-identical — the
+    replay-determinism property the golden-file tests pin.
+    """
+    import tempfile
+
+    import numpy as np
+
+    from repro.ftx.events import load_trace
+    from repro.ftx.failures import replay_trace
+    from repro.ftx.options import RepairOptions
+    from repro.ftx.stripestore import StoreConfig, StripeStore
+
+    nodes = args.nodes or 24
+    topo = Topology(num_nodes=nodes, num_domains=args.domains, seed=args.seed)
+    cfg = StoreConfig(scheme=args.scheme, k=args.k, r=args.r, p=args.p,
+                      block_size=1024, batch_stripes=8,
+                      placement_policy=args.policy, seed=args.seed)
+    with tempfile.TemporaryDirectory() as scratch:
+        root = args.replay_store or scratch
+        store = StripeStore(Path(root) / "replay_store", cfg,
+                            num_nodes=nodes, topology=topo)
+        rng = np.random.default_rng(args.seed)
+        for i in range(12):
+            store.put(f"obj{i}", rng.integers(
+                0, 256, 4 * args.k * cfg.block_size // 5,
+                dtype=np.uint8).tobytes())
+        store.seal()
+        events = load_trace(args.replay)
+        res = replay_trace(store, events,
+                           options=RepairOptions(
+                               schedule=args.schedule,
+                               destinations=args.destinations),
+                           revive=args.destinations != "topology",
+                           rebalance_after=args.rebalance)
+    # Simulated seconds accumulate across reader-pool threads, so their
+    # float sum can wiggle in the last ulp between runs; round them to a
+    # stable precision. Every other replay field is an exact count.
+    for row in res["batches"] + [res["totals"]]:
+        row["sim_seconds"] = round(row["sim_seconds"], 6)
+    out = {
+        "scheme": args.scheme, "k": args.k, "r": args.r, "p": args.p,
+        "nodes": nodes, "domains": args.domains, "policy": args.policy,
+        "trace": args.replay, "trace_events": len(events),
+        "schedule": args.schedule or cfg.stripe_schedule,
+        "destinations": args.destinations or cfg.rebuild_destinations,
+        "batches": res["batches"], "totals": res["totals"],
+        "rebalance": res["rebalance"],
+    }
+    print(json.dumps(out, indent=1, sort_keys=True))
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--scheme", default="cp-azure")
@@ -67,7 +128,26 @@ def main(argv=None) -> int:
                          "scratch store under DIR and use it")
     ap.add_argument("--events", metavar="OUT.json", default=None,
                     help="record per-trial FleetEvent logs to a file")
+    ap.add_argument("--replay", metavar="TRACE.json", default=None,
+                    help="replay a FleetEvent trace against a real "
+                         "StripeStore with correlated-arrival batching "
+                         "(repro.ftx.failures.replay_trace) instead of "
+                         "running the simulator")
+    ap.add_argument("--replay-store", metavar="DIR", default=None,
+                    help="scratch directory for the replay store "
+                         "(default: a temp dir)")
+    ap.add_argument("--schedule", default=None,
+                    choices=("none", "locality", "global"),
+                    help="stripe schedule for --replay repairs")
+    ap.add_argument("--destinations", default=None,
+                    choices=("in_place", "topology"),
+                    help="rebuild destinations for --replay repairs")
+    ap.add_argument("--rebalance", action="store_true",
+                    help="run one rebalance pass after the --replay trace")
     args = ap.parse_args(argv)
+
+    if args.replay:
+        return _replay(args)
 
     scheme = make_scheme(args.scheme, args.k, args.r, args.p)
     rel = ReliabilityParams()

@@ -160,7 +160,7 @@ def test_manifest_roundtrip_keeps_policy_and_topology(tmp_path):
     store.save_manifest()
     loaded = StripeStore.load(tmp_path / "s")
     assert loaded.cfg.placement_policy == "spread"
-    assert loaded.cfg.stripe_schedule == "locality"
+    assert loaded.cfg.stripe_schedule == "global"
     assert loaded.stripes[3].node_of_block == store.stripes[3].node_of_block
     # the explicit topology round-trips: same domains, same num_nodes, and
     # new stripes keep placing under the original copyset policy/seed
@@ -402,3 +402,27 @@ def test_update_baseline_reports_merged_vs_reseeded(tmp_path, capsys):
     assert "kept (merged from old baseline): sharded_gather" in out
     kept = json.loads(baseline.read_text())["sections"]
     assert set(kept) == {"stripe_schedule", "sharded_gather"}
+
+
+def test_update_baseline_refuses_to_drop_gated_metric(tmp_path, capsys):
+    """--update-baseline must exit non-zero when a re-seeded section no
+    longer produces a metric its old baseline gated — a benchmark rename
+    must not silently delete a CI floor."""
+    from benchmarks.check_regression import main
+
+    results = tmp_path / "results"
+    results.mkdir()
+    baseline = tmp_path / "baseline.json"
+    (results / "stripe_schedule.json").write_text(json.dumps({
+        "min_local_uplift": 2.0, "min_scheduled_local_fraction": 0.3}))
+    baseline.write_text(json.dumps({"tolerance": 0.3, "sections": {
+        "stripe_schedule": {"min_local_uplift": 2.0,
+                            "min_scheduled_local_fraction": 0.3,
+                            "retired_metric": 1.0}}}))
+    before = baseline.read_text()
+    assert main(["--update-baseline", "--results", str(results),
+                 "--baseline", str(baseline),
+                 "--sections", "stripe_schedule"]) == 1
+    err = capsys.readouterr().err
+    assert "stripe_schedule/retired_metric" in err
+    assert baseline.read_text() == before       # baseline left untouched
